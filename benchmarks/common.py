@@ -1,0 +1,114 @@
+"""Shared benchmark harness: scaled system configs, cached simulation runs,
+CSV output.
+
+Scaling note (DESIGN.md §2 Layer A): fast tier = 2048 x 256 B blocks,
+slow:fast = 32:1 (paper default), traces of 48k post-LLC accesses over
+synthetic workload proxies.  All *ratios* (capacity ratio, metadata
+fractions, cache-geometry proportions — Table 1 scaled by 1/8) are faithful;
+absolute sizes are scaled for CPU runtime.  Relative claims (speedups,
+savings, hit-rate deltas) are the reproduction targets.
+"""
+
+from __future__ import annotations
+
+import csv
+import dataclasses
+import os
+import time
+
+from repro.core import (DDR5_NVM, HBM3_DDR5, SimConfig, WORKLOADS,
+                        generate_trace, relabel_first_touch, run)
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+os.makedirs(RESULTS, exist_ok=True)
+
+TRACE_LEN = 49152
+SEED = 3
+
+# the paper's Figure 7 workload list (our proxies)
+WLS = ["cactuBSSN", "lbm", "fotonik3d", "roms", "xz",
+       "pr", "bfs", "cc", "sssp", "bc", "tc",
+       "silo_tpcc", "ycsb_a", "ycsb_b"]
+
+BASE = dict(fast_total_blocks=2048, ratio=32, n_sets=4)
+
+
+def scheme_config(scheme: str, **over) -> SimConfig:
+    base = {**BASE, **over}
+    mk = {
+        "trimma_c": dict(mode="cache", meta="irt", remap_cache="irc",
+                         install_threshold=2),
+        "trimma_f": dict(mode="flat", meta="irt", remap_cache="irc"),
+        "linear_c": dict(mode="cache", meta="linear",
+                         remap_cache="conventional", install_threshold=2),
+        "mempod": dict(mode="flat", meta="linear",
+                       remap_cache="conventional"),
+        "alloy": dict(mode="cache", meta="alloy", remap_cache="none",
+                      n_sets=1),
+        "lohhill": dict(mode="cache", meta="lohhill", remap_cache="none",
+                        n_sets=1),
+        "ideal_c": dict(mode="cache", meta="ideal", remap_cache="ideal",
+                        install_threshold=2),
+        "ideal_f": dict(mode="flat", meta="ideal", remap_cache="ideal"),
+        "trimma_c_conv": dict(mode="cache", meta="irt",
+                              remap_cache="conventional",
+                              install_threshold=2),
+        "trimma_f_conv": dict(mode="flat", meta="irt",
+                              remap_cache="conventional"),
+        "tagmatch": dict(mode="cache", meta="lohhill", remap_cache="none",
+                         n_sets=1),
+    }[scheme]
+    cfg = dict(base)
+    cfg.update(mk)
+    cfg.update(over)
+    return SimConfig(**cfg).validate()
+
+
+_trace_cache: dict = {}
+_run_cache: dict = {}
+
+
+def trace_for(wl: str, n_phys: int, flat: bool, length: int = TRACE_LEN,
+              block_scale: int = 1):
+    key = (wl, n_phys, flat, length)
+    if key not in _trace_cache:
+        blocks, writes = generate_trace(WORKLOADS[wl], n_phys, length, SEED)
+        if flat:
+            blocks = relabel_first_touch(blocks)
+        _trace_cache[key] = (blocks, writes)
+    return _trace_cache[key]
+
+
+def sim(scheme: str, wl: str, timing: str = "hbm3+ddr5", **over) -> dict:
+    cfg = scheme_config(scheme, **over)
+    key = (scheme, wl, timing, tuple(sorted(over.items())))
+    if key in _run_cache:
+        return _run_cache[key]
+    tm = {"hbm3+ddr5": HBM3_DDR5, "ddr5+nvm": DDR5_NVM}[timing]
+    blocks, writes = trace_for(wl, cfg.slow_blocks, cfg.mode == "flat")
+    t0 = time.time()
+    out = run(cfg, tm, blocks, writes)
+    out = {k: v for k, v in out.items() if k != "_state"}
+    out["wall_s"] = time.time() - t0
+    out["scheme"], out["wl"], out["timing"] = scheme, wl, timing
+    _run_cache[key] = out
+    return out
+
+
+def write_csv(name: str, rows: list[dict]) -> str:
+    path = os.path.join(RESULTS, name)
+    if rows:
+        keys = sorted({k for r in rows for k in r})
+        with open(path, "w", newline="") as f:
+            w = csv.DictWriter(f, fieldnames=keys)
+            w.writeheader()
+            w.writerows(rows)
+    return path
+
+
+def geomean(xs):
+    xs = [max(x, 1e-12) for x in xs]
+    p = 1.0
+    for x in xs:
+        p *= x
+    return p ** (1.0 / len(xs))

@@ -1,0 +1,91 @@
+"""Beyond-paper microbenchmarks: kernel reference-path wall times (CPU jit),
+TieredKVCache lookup/migration throughput, and simulator throughput.
+
+On this CPU container the Pallas kernels run in interpret mode (not timed —
+meaningless); the jitted XLA reference ops give a real wall-clock signal
+and the tiered-cache numbers measure the metadata machinery itself.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def _timeit(fn, *args, iters=20):
+    fn(*args)  # compile
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def bench() -> list[dict]:
+    from repro.kernels.flash_attention.ops import flash_attention_op
+    from repro.kernels.irt_lookup.ops import irt_lookup_op
+    from repro.kernels.paged_attention.ops import paged_attention_op
+    from repro.tiered import kvcache as tk
+
+    rows = []
+    key = jax.random.key(0)
+
+    B, S, H, KV, hd = 2, 1024, 8, 2, 64
+    q = jax.random.normal(key, (B, S, H, hd), jnp.float32)
+    k = jax.random.normal(key, (B, S, KV, hd), jnp.float32)
+    v = jax.random.normal(key, (B, S, KV, hd), jnp.float32)
+    us = _timeit(lambda: flash_attention_op(q, k, v, causal=True), iters=5)
+    flops = 4 * B * H * S * S * hd
+    rows.append(dict(name="flash_attention_ref_1k", us_per_call=us,
+                     derived=f"{flops/us/1e6:.1f}GFLOP/s"))
+
+    nslots, page, npages = 256, 64, 16
+    qd = jax.random.normal(key, (B, KV, H // KV, hd), jnp.float32)
+    kp = jax.random.normal(key, (nslots, KV, page, hd), jnp.float32)
+    vp = jax.random.normal(key, (nslots, KV, page, hd), jnp.float32)
+    pt = jax.random.randint(key, (B, npages), 0, nslots)
+    sl = jnp.full((B,), npages * page, jnp.int32)
+    us = _timeit(lambda: paged_attention_op(qd, kp, vp, pt, sl), iters=20)
+    rows.append(dict(name="paged_attention_ref", us_per_call=us,
+                     derived=f"{B*npages*page/us:.1f}tok·pos/us"))
+
+    n_leaf, N = 256, 8192
+    ids = jax.random.randint(key, (N,), 0, n_leaf * 64)
+    home = ids + 100000
+    bits = jax.random.randint(key, ((n_leaf + 31) // 32,), -2**31, 2**31 - 1,
+                              jnp.int32)
+    leaf = jax.random.randint(key, (n_leaf * 64,), -1, 999, jnp.int32)
+    us = _timeit(lambda: irt_lookup_op(ids, home, bits, leaf), iters=50)
+    rows.append(dict(name="irt_lookup_8k", us_per_call=us,
+                     derived=f"{N/us:.1f}lookups/us"))
+
+    cfg = tk.TieredConfig(n_seqs=8, max_pages_per_seq=64, page_tokens=16,
+                          n_kv_heads=2, head_dim=64, fast_data_slots=64,
+                          dtype="float32")
+    st = tk.init_state(cfg)
+    pages = jnp.tile(jnp.arange(64)[None], (8, 1))
+    ids2 = tk.logical_page(cfg, jnp.arange(8)[:, None], pages)
+    lookup = jax.jit(lambda s: tk.lookup(cfg, s, ids2)[1])
+    us = _timeit(lookup, st, iters=20)
+    rows.append(dict(name="tiered_lookup_512pages", us_per_call=us,
+                     derived=f"{512/us:.2f}pages/us"))
+    migrate = jax.jit(lambda s: tk.migrate_hot(cfg, s, max_moves=4))
+    st2 = st._replace(touch=st.touch.at[:16].set(5))
+    us = _timeit(migrate, st2, iters=10)
+    rows.append(dict(name="tiered_migrate_4", us_per_call=us,
+                     derived="4 moves"))
+
+    # simulator throughput
+    from repro.core import HBM3_DDR5, WORKLOADS, generate_trace, run, trimma_cache
+    scfg = trimma_cache()
+    blocks, writes = generate_trace(WORKLOADS["pr"], scfg.n_phys, 16384, 1)
+    run(scfg, HBM3_DDR5, blocks, writes)  # compile
+    t0 = time.perf_counter()
+    run(scfg, HBM3_DDR5, blocks, writes)
+    dt = time.perf_counter() - t0
+    rows.append(dict(name="simulator_trimma_c", us_per_call=dt * 1e6,
+                     derived=f"{16384/dt/1e3:.0f}k acc/s"))
+    return rows

@@ -1,0 +1,76 @@
+"""Benchmark entry point: one function per paper figure/table plus the
+beyond-paper kernel/tiered microbenchmarks.
+
+Prints ``name,us_per_call,derived`` CSV rows (the harness contract); the
+detailed per-figure data lands in benchmarks/results/*.csv.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--skip-sim]
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="4 workloads instead of 14")
+    ap.add_argument("--skip-sim", action="store_true",
+                    help="only the kernel/tiered microbenchmarks")
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+
+    from . import kernels_bench
+    for row in kernels_bench.bench():
+        print(f"{row['name']},{row['us_per_call']:.1f},{row['derived']}")
+        sys.stdout.flush()
+
+    if args.skip_sim:
+        return
+
+    from . import figures
+
+    figs = [
+        ("fig1_associativity", lambda: figures.fig1_associativity(args.quick)),
+        ("fig7_hbm3_ddr5", lambda: figures.fig7_overall(args.quick,
+                                                        "hbm3+ddr5")),
+        ("fig7_ddr5_nvm", lambda: figures.fig7_overall(args.quick,
+                                                       "ddr5+nvm")),
+        ("fig8_breakdown", lambda: figures.fig8_breakdown(args.quick)),
+        ("fig9_metadata", lambda: figures.fig9_metadata(args.quick)),
+        ("fig10_serve_bloat", lambda: figures.fig10_serve_bloat(args.quick)),
+        ("fig11_irc", lambda: figures.fig11_irc(args.quick)),
+        ("fig12_sensitivity", lambda: figures.fig12_sensitivity(args.quick)),
+        ("fig13_config", lambda: figures.fig13_config(args.quick)),
+    ]
+    for name, fn in figs:
+        t0 = time.time()
+        _, headline = fn()
+        us = (time.time() - t0) * 1e6
+        print(f"{name},{us:.0f},\"{headline}\"")
+        sys.stdout.flush()
+
+    # roofline summary (reads the dry-run results if present)
+    try:
+        from . import roofline
+        rows = roofline.analyse("16x16")
+        ok = [r for r in rows if r["status"] == "ok"]
+        if ok:
+            dom = {}
+            for r in ok:
+                dom[r["dominant"]] = dom.get(r["dominant"], 0) + 1
+            print(f"roofline_16x16,0,\"{len(ok)} cells; dominant: {dom}\"")
+    except FileNotFoundError:
+        print("roofline_16x16,0,\"run repro.launch.dryrun first\"")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Serving example: batched greedy decode with the engine, plus the tiered
+KV path — long-context pages live in the slow tier, hot pages migrate into
+the HBM pool under Trimma metadata, and attention reads through the
+translated page table (compared against the dense-cache reference).
+
+    PYTHONPATH=src python examples/serve_tiered.py
+"""
+import sys
+sys.path.insert(0, "src")
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduce_for_smoke
+from repro.kernels.paged_attention.ref import paged_attention_ref
+from repro.models import init_params
+from repro.serve.engine import Engine, EngineConfig, Request
+from repro.tiered import kvcache as tk
+
+# --- 1. batched serving with the engine ------------------------------------
+cfg = reduce_for_smoke(get_config("llama3-8b"))
+params = init_params(cfg, jax.random.key(0))
+eng = Engine(cfg, params, EngineConfig(batch=2, max_len=64))
+rng = np.random.default_rng(0)
+for rid in range(4):
+    eng.submit(Request(rid=rid,
+                       prompt=rng.integers(0, cfg.vocab, size=4),
+                       max_new=8 + 8 * (rid % 2)))
+done = eng.run(log=print)
+for r in sorted(done, key=lambda r: r.rid):
+    print(f"  req {r.rid}: {len(r.tokens)} tokens -> {r.tokens[:8]}...")
+
+# --- 2. tiered KV attention: translation must be invisible ------------------
+print("\n=== tiered KV: dense reference vs Trimma-translated paged read ===")
+tcfg = tk.TieredConfig(n_seqs=2, max_pages_per_seq=64, page_tokens=16,
+                       n_kv_heads=2, head_dim=32, fast_data_slots=8,
+                       dtype="float32")
+st = tk.init_state(tcfg)
+key = jax.random.key(1)
+st = st._replace(slow_k=jax.random.normal(key, st.slow_k.shape),
+                 slow_v=jax.random.normal(jax.random.fold_in(key, 1),
+                                          st.slow_v.shape))
+q = jax.random.normal(jax.random.fold_in(key, 2),
+                      (tcfg.n_seqs, tcfg.n_kv_heads, 4, tcfg.head_dim))
+pages = jnp.tile(jnp.arange(tcfg.max_pages_per_seq)[None], (tcfg.n_seqs, 1))
+ids = tk.logical_page(tcfg, jnp.arange(tcfg.n_seqs)[:, None], pages)
+
+outs = []
+for step in range(6):
+    table, st = tk.lookup(tcfg, st, ids)
+    uk, uv = tk.unified_pools(st)
+    sl = jnp.full((tcfg.n_seqs,), 512, jnp.int32)
+    outs.append(paged_attention_ref(q, uk, uv, table, sl))
+    st = tk.migrate_hot(tcfg, st, max_moves=3)
+
+drift = max(float(jnp.abs(o - outs[0]).max()) for o in outs)
+print(f"  attention drift across {len(outs)} migration rounds: {drift:.2e} "
+      "(must be ~0)")
+print(f"  migrations={int(st.migrations)} forced_evictions="
+      f"{int(st.forced_evict)} iRC hit rate="
+      f"{int(st.irc_hits)/max(int(st.lookups),1):.0%}")
+assert drift < 1e-5

@@ -1,0 +1,185 @@
+"""Sharded checkpointing with elastic restore (fault tolerance substrate).
+
+Design (DESIGN.md §5):
+  * a checkpoint is a directory: manifest.json + one .npy per pytree leaf
+    (flattened path -> file), each with a content hash;
+  * saves are atomic (write to .tmp, fsync, rename) so a preemption during
+    save never corrupts the latest checkpoint;
+  * async save: the step loop hands off host copies to a worker thread and
+    keeps training (save_async / wait);
+  * restore is *elastic*: leaves are loaded as full host arrays and
+    device_put under the CURRENT mesh's shardings — a job restarted on a
+    different pod count / mesh shape resharding-restores transparently;
+  * retention: keep the last K checkpoints, delete older atomically.
+
+On a real multi-host pod each host would write only the shards it owns
+(jax.experimental.multihost_utils); in this single-process container every
+leaf is fully addressable, so we write whole arrays.  The manifest format
+already records per-leaf shape/dtype so the multi-host writer slots in
+without format changes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import shutil
+import threading
+import time
+
+import jax
+import numpy as np
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out.update(_flatten(tree[k], f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)) and not hasattr(tree, "_fields"):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+    elif hasattr(tree, "_fields"):  # NamedTuple
+        for k in tree._fields:
+            out.update(_flatten(getattr(tree, k), f"{prefix}{k}/"))
+    else:
+        out[prefix[:-1]] = tree
+    return out
+
+
+def _unflatten_like(template, flat, prefix=""):
+    if isinstance(template, dict):
+        return {k: _unflatten_like(template[k], flat, f"{prefix}{k}/")
+                for k in template}
+    if hasattr(template, "_fields"):
+        return type(template)(*[
+            _unflatten_like(getattr(template, k), flat, f"{prefix}{k}/")
+            for k in template._fields])
+    if isinstance(template, (list, tuple)):
+        return type(template)(
+            _unflatten_like(v, flat, f"{prefix}{i}/")
+            for i, v in enumerate(template))
+    return flat[prefix[:-1]]
+
+
+def _leaf_path(name: str) -> str:
+    return name.replace("/", "__") + ".npy"
+
+
+@dataclasses.dataclass
+class CheckpointManager:
+    directory: str
+    keep: int = 3
+
+    def __post_init__(self):
+        os.makedirs(self.directory, exist_ok=True)
+        self._thread: threading.Thread | None = None
+        self._error: BaseException | None = None
+
+    # -- discovery ---------------------------------------------------------
+    def all_steps(self) -> list[int]:
+        steps = []
+        for d in os.listdir(self.directory):
+            if d.startswith("step_") and os.path.exists(
+                    os.path.join(self.directory, d, "manifest.json")):
+                steps.append(int(d.split("_")[1]))
+        return sorted(steps)
+
+    def latest_step(self) -> int | None:
+        s = self.all_steps()
+        return s[-1] if s else None
+
+    # -- save ---------------------------------------------------------------
+    def save(self, step: int, tree, extra: dict | None = None) -> str:
+        """Synchronous atomic save."""
+        host = jax.tree.map(lambda x: np.asarray(x), tree)
+        return self._write(step, host, extra or {})
+
+    def save_async(self, step: int, tree, extra: dict | None = None):
+        """Snapshot to host, then write on a background thread."""
+        self.wait()
+        host = jax.tree.map(lambda x: np.asarray(x), tree)  # device->host now
+
+        def work():
+            try:
+                self._write(step, host, extra or {})
+            except BaseException as e:  # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def _write(self, step: int, host_tree, extra: dict) -> str:
+        final = os.path.join(self.directory, f"step_{step:08d}")
+        tmp = final + ".tmp"
+        shutil.rmtree(tmp, ignore_errors=True)
+        os.makedirs(tmp)
+        flat = _flatten(host_tree)
+        manifest = {"step": step, "time": time.time(), "extra": extra,
+                    "leaves": {}}
+        for name, arr in flat.items():
+            arr = np.asarray(arr)
+            fn = _leaf_path(name)
+            with open(os.path.join(tmp, fn), "wb") as f:
+                np.save(f, arr)
+                f.flush()
+                os.fsync(f.fileno())
+            manifest["leaves"][name] = {
+                "file": fn, "shape": list(arr.shape), "dtype": str(arr.dtype),
+                "sha256": hashlib.sha256(arr.tobytes()).hexdigest()[:16],
+            }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        shutil.rmtree(final, ignore_errors=True)
+        os.rename(tmp, final)          # atomic publish
+        self._gc()
+        return final
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    # -- restore -------------------------------------------------------------
+    def restore(self, step: int | None, template, shardings=None,
+                verify: bool = True):
+        """Load into the structure of ``template``; device_put under
+        ``shardings`` (same structure) when given — this is the elastic
+        resharding path: the checkpoint does not know or care what mesh it
+        was written from."""
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.directory}")
+        d = os.path.join(self.directory, f"step_{step:08d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        flat = {}
+        for name, meta in manifest["leaves"].items():
+            arr = np.load(os.path.join(d, meta["file"]))
+            if verify:
+                h = hashlib.sha256(arr.tobytes()).hexdigest()[:16]
+                if h != meta["sha256"]:
+                    raise IOError(f"checkpoint corruption in leaf {name}")
+            flat[name] = arr
+        tree = _unflatten_like(template, flat)
+        if shardings is not None:
+            flat_sh = _flatten(shardings)
+            tree = _unflatten_like(
+                template,
+                {k: jax.device_put(v, flat_sh[k]) for k, v in
+                 _flatten(tree).items()})
+        return tree, manifest["extra"], step

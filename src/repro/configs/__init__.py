@@ -1,0 +1,8 @@
+"""Architecture registry: one module per assigned architecture."""
+from .base import (REGISTRY, SHAPES, ArchConfig, ShapeConfig, cell_supported,
+                   get_config, reduce_for_smoke)
+from . import (codeqwen1p5_7b, granite_moe_3b, hubert_xlarge, hymba_1p5b,
+               llama3_8b, llama32_vision_90b, mixtral_8x22b, qwen2_72b,
+               qwen2_7b, xlstm_125m)  # noqa: F401  (registration side effect)
+
+ALL_ARCHS = sorted(REGISTRY)

@@ -1,0 +1,200 @@
+"""Remap caches: conventional (baseline) and identity-mapping-aware (iRC).
+
+Pure-functional JAX implementations operating on a state dict of int32
+arrays, usable inside ``jax.lax.scan``.  Geometry comes from
+``SimConfig`` (Section 3.4 / Table 1 of the paper, proportionally scaled).
+
+Conventional remap cache
+    rc_tag[S, W]  : cached physical block id (-1 invalid)
+    rc_val[S, W]  : device encoding (IDENTITY / fast slot / slow slot)
+    rc_fifo[S]    : FIFO fill pointer
+
+iRC (Section 3.4)
+    NonIdCache — valid (non-identity) entries only:
+        nid_tag[S, W], nid_val[S, W], nid_fifo[S]
+    IdCache — sector-cache bit vectors (1 bit per block, 32 blocks / line):
+        id_tag[S, W]  : super-block id (-1 invalid)
+        id_bits[S, W] : 32-bit identity vector (bit j == 1 -> identity)
+        id_fifo[S]
+    The IdCache uses a hash-based index (Kharbutli et al. [33]) to spread the
+    large number of identity super-blocks across sets.
+
+Invariant (tested by hypothesis in tests/test_properties.py): any hit must
+agree with the ground-truth remap array — entries are invalidated whenever
+the underlying iRT entry changes (Section 3.4: "We simply invalidate").
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .config import IDENTITY, SimConfig
+
+_HASH_MULT = 2654435761  # Knuth multiplicative hash
+
+
+def _id_index(super_block: jnp.ndarray, id_sets: int) -> jnp.ndarray:
+    h = (super_block.astype(jnp.uint32) * jnp.uint32(_HASH_MULT)) >> jnp.uint32(16)
+    return (h % jnp.uint32(id_sets)).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# state construction
+# ---------------------------------------------------------------------------
+
+def init_state(cfg: SimConfig) -> dict:
+    if cfg.remap_cache == "conventional":
+        return {
+            "rc_tag": jnp.full((cfg.rc_sets, cfg.rc_ways), -1, jnp.int32),
+            "rc_val": jnp.full((cfg.rc_sets, cfg.rc_ways), IDENTITY, jnp.int32),
+            "rc_fifo": jnp.zeros((cfg.rc_sets,), jnp.int32),
+        }
+    if cfg.remap_cache == "irc":
+        return {
+            "nid_tag": jnp.full((cfg.nid_sets, cfg.nid_ways), -1, jnp.int32),
+            "nid_val": jnp.full((cfg.nid_sets, cfg.nid_ways), IDENTITY, jnp.int32),
+            "nid_fifo": jnp.zeros((cfg.nid_sets,), jnp.int32),
+            "id_tag": jnp.full((cfg.id_sets, cfg.id_ways), -1, jnp.int32),
+            "id_bits": jnp.zeros((cfg.id_sets, cfg.id_ways), jnp.uint32),
+            "id_fifo": jnp.zeros((cfg.id_sets,), jnp.int32),
+        }
+    return {}
+
+
+# ---------------------------------------------------------------------------
+# probe
+# ---------------------------------------------------------------------------
+
+def probe(cfg: SimConfig, st: dict, b: jnp.ndarray):
+    """Probe the remap cache for block ``b``.
+
+    Returns (hit, value, id_hit) where ``value`` is the device encoding
+    (meaningful only when hit) and ``id_hit`` flags an IdCache hit (its value
+    is always IDENTITY).
+    """
+    if cfg.remap_cache == "ideal":
+        return jnp.bool_(True), jnp.int32(IDENTITY), jnp.bool_(False)  # value unused
+    if cfg.remap_cache == "none":
+        return jnp.bool_(False), jnp.int32(IDENTITY), jnp.bool_(False)
+
+    if cfg.remap_cache == "conventional":
+        s = b % cfg.rc_sets
+        tags = st["rc_tag"][s]
+        match = tags == b
+        hit = match.any()
+        val = jnp.where(match, st["rc_val"][s], 0).sum().astype(jnp.int32)
+        return hit, jnp.where(hit, val, IDENTITY).astype(jnp.int32), jnp.bool_(False)
+
+    # iRC: probe both components in parallel (Section 3.4)
+    s_n = b % cfg.nid_sets
+    n_match = st["nid_tag"][s_n] == b
+    nid_hit = n_match.any()
+    nid_val = jnp.where(n_match, st["nid_val"][s_n], 0).sum().astype(jnp.int32)
+
+    sb = b // cfg.id_sector_blocks
+    bit = (b % cfg.id_sector_blocks).astype(jnp.uint32)
+    s_i = _id_index(sb, cfg.id_sets)
+    i_match = st["id_tag"][s_i] == sb
+    line_bits = jnp.where(i_match, st["id_bits"][s_i], jnp.uint32(0)).sum()
+    id_hit = i_match.any() & (((line_bits >> bit) & jnp.uint32(1)) == 1)
+
+    hit = nid_hit | id_hit
+    val = jnp.where(nid_hit, nid_val, IDENTITY).astype(jnp.int32)
+    return hit, val, id_hit
+
+
+# ---------------------------------------------------------------------------
+# fill (after an iRT / linear-table walk)
+# ---------------------------------------------------------------------------
+
+def fill(cfg: SimConfig, st: dict, b: jnp.ndarray, dev: jnp.ndarray,
+         remap: jnp.ndarray, enable: jnp.ndarray) -> dict:
+    """Insert the walked entry.  ``remap`` is the ground-truth table (used to
+    assemble the sector bit vector on IdCache fills, as a real fill would read
+    the neighbouring iRT entries from the same leaf block)."""
+    if cfg.remap_cache in ("ideal", "none"):
+        return st
+    en = enable
+
+    if cfg.remap_cache == "conventional":
+        s = b % cfg.rc_sets
+        w = st["rc_fifo"][s] % cfg.rc_ways
+        st = dict(st)
+        st["rc_tag"] = st["rc_tag"].at[s, w].set(jnp.where(en, b, st["rc_tag"][s, w]))
+        st["rc_val"] = st["rc_val"].at[s, w].set(jnp.where(en, dev, st["rc_val"][s, w]))
+        st["rc_fifo"] = st["rc_fifo"].at[s].add(jnp.where(en, 1, 0))
+        return st
+
+    st = dict(st)
+    is_identity = dev == IDENTITY
+
+    # non-identity -> NonIdCache
+    en_n = en & ~is_identity
+    s_n = b % cfg.nid_sets
+    w_n = st["nid_fifo"][s_n] % cfg.nid_ways
+    st["nid_tag"] = st["nid_tag"].at[s_n, w_n].set(
+        jnp.where(en_n, b, st["nid_tag"][s_n, w_n]))
+    st["nid_val"] = st["nid_val"].at[s_n, w_n].set(
+        jnp.where(en_n, dev, st["nid_val"][s_n, w_n]))
+    st["nid_fifo"] = st["nid_fifo"].at[s_n].add(jnp.where(en_n, 1, 0))
+
+    # identity -> IdCache: assemble the 32-bit vector for the super-block
+    en_i = en & is_identity
+    sb = b // cfg.id_sector_blocks
+    base = sb * cfg.id_sector_blocks
+    idxs = base + jnp.arange(cfg.id_sector_blocks, dtype=jnp.int32)
+    valid = idxs < remap.shape[0]
+    sector = remap[jnp.clip(idxs, 0, remap.shape[0] - 1)]
+    bits_vec = ((sector == IDENTITY) & valid).astype(jnp.uint32)
+    vec = (bits_vec << jnp.arange(32, dtype=jnp.uint32)).sum(dtype=jnp.uint32)
+
+    s_i = _id_index(sb, cfg.id_sets)
+    present = st["id_tag"][s_i] == sb
+    have_line = present.any()
+    # refresh in place when present, otherwise FIFO-fill a new line
+    w_fifo = st["id_fifo"][s_i] % cfg.id_ways
+    w_i = jnp.where(have_line, jnp.argmax(present), w_fifo).astype(jnp.int32)
+    st["id_tag"] = st["id_tag"].at[s_i, w_i].set(
+        jnp.where(en_i, sb, st["id_tag"][s_i, w_i]))
+    st["id_bits"] = st["id_bits"].at[s_i, w_i].set(
+        jnp.where(en_i, vec, st["id_bits"][s_i, w_i]))
+    st["id_fifo"] = st["id_fifo"].at[s_i].add(jnp.where(en_i & ~have_line, 1, 0))
+    return st
+
+
+# ---------------------------------------------------------------------------
+# invalidate / update-in-place (on any iRT update of block b: Section 3.4)
+# ---------------------------------------------------------------------------
+
+def invalidate(cfg: SimConfig, st: dict, b: jnp.ndarray, enable: jnp.ndarray,
+               becomes_identity: jnp.ndarray | bool = False) -> dict:
+    """Keep the remap cache consistent with an iRT update of block ``b``.
+
+    The paper invalidates at *entry* granularity ("We simply invalidate the
+    entries from iRC").  For the NonIdCache the entry is a full line, so we
+    kill it.  For the sector-organised IdCache the entry is a single bit:
+    we update the bit in place (both identity transitions are representable),
+    preserving the line's coverage of the other 31 blocks."""
+    if cfg.remap_cache in ("ideal", "none"):
+        return st
+    st = dict(st)
+    if cfg.remap_cache == "conventional":
+        s = b % cfg.rc_sets
+        kill = (st["rc_tag"][s] == b) & enable
+        st["rc_tag"] = st["rc_tag"].at[s].set(jnp.where(kill, -1, st["rc_tag"][s]))
+        return st
+
+    s_n = b % cfg.nid_sets
+    kill_n = (st["nid_tag"][s_n] == b) & enable
+    st["nid_tag"] = st["nid_tag"].at[s_n].set(
+        jnp.where(kill_n, -1, st["nid_tag"][s_n]))
+
+    sb = b // cfg.id_sector_blocks
+    bit = (b % cfg.id_sector_blocks).astype(jnp.uint32)
+    s_i = _id_index(sb, cfg.id_sets)
+    present = (st["id_tag"][s_i] == sb) & enable
+    new_bit = jnp.asarray(becomes_identity, jnp.uint32)
+    line = st["id_bits"][s_i]
+    updated = (line & ~(jnp.uint32(1) << bit)) | (new_bit << bit)
+    st["id_bits"] = st["id_bits"].at[s_i].set(jnp.where(present, updated, line))
+    return st

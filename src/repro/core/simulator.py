@@ -1,0 +1,582 @@
+"""Trace-driven hybrid-memory simulator (pure JAX, lax.scan).
+
+Implements the access flow of Figure 3/4 for every scheme the paper
+evaluates:
+
+  Trimma-C / Trimma-F  : iRT (Section 3.2) + saved-space caching (Section 3.3)
+                         + iRC (Section 3.4)
+  linear-C (Sim et al.) / MemPod-F : linear remap table + conventional cache
+  Alloy Cache          : direct-mapped, tags-with-data, perfect MAP
+  Loh-Hill Cache       : 30-way row-local tags, perfect MissMap
+  Ideal                : zero-cost metadata upper bound (Figure 1)
+
+Device-address encoding: see core/config.py.  All state lives in int32
+arrays carried through ``jax.lax.scan``; the per-access step is fully
+vectorised over cache ways / set slots (no data-dependent Python control
+flow), so one ``jit`` specialisation covers every workload of the same
+geometry.  Compiled steps are cached per (config, timing).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import irc as irc_ops
+from .config import IDENTITY, SimConfig
+from .timing import TimingModel
+
+E = 64  # iRT entries per leaf metadata block (256 B / 4 B, Section 3.2)
+
+
+# ---------------------------------------------------------------------------
+# static geometry tables
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Geometry:
+    cfg: SimConfig
+    n_sets: int
+    log_sets: int
+    k_data: int            # data slots per set
+    k_meta: int            # lendable metadata slots per set
+    k: int                 # slots per set
+    lf: int                # forward leaves per set
+    li: int                # inverted leaves per set
+    n_leaf: int            # total sim-local leaves (all sets)
+    n_inter: int           # intermediate-level blocks (always allocated)
+    fast_home_blocks: int  # flat mode: blocks whose home is a fast data slot
+
+    @property
+    def fast_slots(self) -> int:
+        return self.n_sets * self.k
+
+
+def make_geometry(cfg: SimConfig) -> Geometry:
+    n_sets = cfg.n_sets
+    assert n_sets & (n_sets - 1) == 0, "n_sets must be a power of two"
+    log_sets = n_sets.bit_length() - 1
+    k_data = cfg.fast_data_slots // n_sets
+    assert k_data >= 1
+    k_meta = cfg.fast_meta_slots // n_sets
+    k = k_data + k_meta
+    bps = -(-cfg.n_phys // n_sets)           # blocks per set
+    lf = -(-bps // E)
+    li = -(-k // E)
+    n_leaf = n_sets * (lf + li)
+    track = cfg.meta == "irt" and cfg.irt_levels >= 2
+    n_inter = max(n_sets * -(-(lf + li) // (cfg.block_bytes * 8)), n_sets) \
+        if track else 0
+    fast_home = k_data * n_sets if cfg.mode == "flat" else 0
+    return Geometry(cfg, n_sets, log_sets, k_data, k_meta, k, lf, li,
+                    n_leaf, n_inter, fast_home)
+
+
+def static_tables(g: Geometry) -> dict:
+    """Precomputed numpy tables baked into the jitted step as constants."""
+    slots = np.arange(g.fast_slots, dtype=np.int32)
+    slot_set = slots // g.k
+    slot_u = slots % g.k
+    slot_is_meta = slot_u >= g.k_data
+
+    # leaf hosted at each lendable meta slot: per set, leaves [0, lf+li) are
+    # hosted in meta slots [k_data, k_data + min(k_meta, lf+li)).
+    lps = g.lf + g.li
+    hosted = np.full(g.fast_slots, -1, dtype=np.int32)
+    j = slot_u - g.k_data
+    mask = slot_is_meta & (j < lps)
+    hosted[mask] = (slot_set[mask] * lps + j[mask]).astype(np.int32)
+
+    # slot hosting each leaf (global leaf id; -1 if not lendable)
+    slot_of_leaf = np.full(max(g.n_leaf, 1), -1, dtype=np.int32)
+    valid = hosted >= 0
+    slot_of_leaf[hosted[valid]] = slots[valid]
+
+    return {
+        "slot_set": slot_set, "slot_u": slot_u,
+        "slot_is_meta": slot_is_meta.astype(np.bool_),
+        "leaf_hosted": hosted, "slot_of_leaf": slot_of_leaf,
+    }
+
+
+# --- id helpers (traced) ----------------------------------------------------
+
+def leaf_fwd(g: Geometry, b):
+    s = b & (g.n_sets - 1)
+    w = b >> g.log_sets
+    return s * (g.lf + g.li) + w // E
+
+
+def leaf_inv(g: Geometry, v):
+    s = v // g.k
+    u = v % g.k
+    return s * (g.lf + g.li) + g.lf + u // E
+
+
+def home_slot(g: Geometry, p):
+    """Flat mode: fast-home slot of phys block p (valid when p < fast_home)."""
+    s = p & (g.n_sets - 1)
+    u = p >> g.log_sets
+    return s * g.k + u
+
+
+def home_block(g: Geometry, v):
+    """Flat mode: the block whose home is data slot v."""
+    s = v // g.k
+    u = v % g.k
+    return (u << g.log_sets) | s
+
+
+# ---------------------------------------------------------------------------
+# state
+# ---------------------------------------------------------------------------
+
+COUNTERS = [
+    "n_acc", "rc_hit", "rc_id_hit", "rc_nid_hit", "rc_incons", "serve_fast",
+    "installs", "swaps", "forced_evict", "writebacks", "walks", "deallocs",
+    "cyc_sram", "cyc_meta", "cyc_fast", "cyc_slow",
+    "by_fast", "by_slow_rd", "by_slow_wr",
+]
+
+
+def init_state(cfg: SimConfig, g: Geometry) -> dict:
+    st = {
+        "remap": jnp.full((cfg.n_phys,), IDENTITY, jnp.int32),
+        "slot_owner": jnp.full((g.fast_slots,), -1, jnp.int32),
+        "slot_dirty": jnp.zeros((g.fast_slots,), jnp.bool_),
+        "leaf_cnt": jnp.zeros((max(g.n_leaf, 1),), jnp.int32),
+        "fifo_ptr": jnp.zeros((g.n_sets,), jnp.int32),
+        "step": jnp.zeros((), jnp.int32),
+    }
+    if cfg.mode == "flat":
+        # data slots start occupied by their home blocks (identity);
+        # hotness counters drive the migration policy
+        tab = static_tables(g)
+        owner = np.where(
+            ~tab["slot_is_meta"],
+            ((tab["slot_u"] << g.log_sets) | tab["slot_set"]).astype(np.int32),
+            -1)
+        st["slot_owner"] = jnp.asarray(owner, jnp.int32)
+        st["touch"] = jnp.zeros((cfg.n_phys,), jnp.int32)
+    elif cfg.install_threshold > 0:
+        st["touch"] = jnp.zeros((cfg.n_phys,), jnp.int32)
+    st.update(irc_ops.init_state(cfg))
+    for c in COUNTERS:
+        st[c] = jnp.zeros((), jnp.int32)
+    return st
+
+
+# ---------------------------------------------------------------------------
+# shared masked-update helpers
+# ---------------------------------------------------------------------------
+
+def _madd(arr, idx, delta, enable):
+    idx = jnp.where(enable, idx, 0)
+    return arr.at[idx].add(jnp.where(enable, delta, 0))
+
+
+def _mset(arr, idx, val, enable):
+    idx = jnp.where(enable, idx, 0)
+    return arr.at[idx].set(jnp.where(enable, val, arr[idx]))
+
+
+def _bump(st, name, delta):
+    st[name] = st[name] + jnp.asarray(delta, jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# per-access step for remap-table schemes (irt / linear / ideal)
+# ---------------------------------------------------------------------------
+
+def make_step(cfg: SimConfig, timing: TimingModel):
+    g = make_geometry(cfg)
+    tab = {k: jnp.asarray(v) for k, v in static_tables(g).items()}
+    track = cfg.meta == "irt" and cfg.irt_levels >= 2
+    is_flat = cfg.mode == "flat"
+    blk, acc = cfg.block_bytes, cfg.access_bytes
+
+    def lf_of(b):
+        return jnp.clip(leaf_fwd(g, b), 0, g.n_leaf - 1) if track else jnp.int32(0)
+
+    def li_of(v):
+        return jnp.clip(leaf_inv(g, v), 0, g.n_leaf - 1) if track else jnp.int32(0)
+
+    def copy_evict(st, v, enable):
+        """Evict the cache-copy occupant of slot v (if any); restore identity."""
+        vv = jnp.where(enable, v, 0)
+        o = st["slot_owner"][vv]
+        has = enable & (o >= 0)
+        dirty = has & st["slot_dirty"][vv]
+        st["remap"] = _mset(st["remap"], o, IDENTITY, has)
+        if track:
+            st["leaf_cnt"] = _madd(st["leaf_cnt"], lf_of(o), -1, has)
+            is_meta = tab["slot_is_meta"][vv]
+            st["leaf_cnt"] = _madd(st["leaf_cnt"], li_of(v), -1, has & is_meta)
+        st["slot_owner"] = _mset(st["slot_owner"], v, -1, enable)
+        st["slot_dirty"] = _mset(st["slot_dirty"], v, False, enable)
+        # dirty writeback: fast read + slow write, off the critical path
+        _bump(st, "by_fast", jnp.where(dirty, blk, 0))
+        _bump(st, "by_slow_wr", jnp.where(dirty, blk, 0))
+        _bump(st, "writebacks", jnp.where(dirty, 1, 0))
+        st.update(irc_ops.invalidate(cfg, st, o, has, becomes_identity=True))
+        return st, has
+
+    def force_evict_hosted(st, leaf, enable):
+        """Metadata priority (Section 3.3): if ``leaf`` just became allocated
+        and its hosting slot caches data, evict that data block."""
+        if not track:
+            return st
+        lc = jnp.clip(leaf, 0, g.n_leaf - 1)
+        h = tab["slot_of_leaf"][lc]
+        now_alloc = st["leaf_cnt"][lc] > 0
+        hv = jnp.clip(h, 0, g.fast_slots - 1)
+        need = enable & (h >= 0) & now_alloc & (st["slot_owner"][hv] >= 0)
+        st, did = copy_evict(st, jnp.maximum(h, 0), need)
+        _bump(st, "forced_evict", jnp.where(did, 1, 0))
+        return st
+
+    def pick_victim(st, b, s):
+        """FIFO victim among the set's slots, skipping allocated-metadata
+        blocks (Section 3.3) and slots whose reuse would conflict with the
+        entries that installing ``b`` must allocate.  Pure: caller commits
+        the FIFO pointer advance when the install actually happens."""
+        base = s * g.k
+        order = (st["fifo_ptr"][s] + jnp.arange(g.k, dtype=jnp.int32)) % g.k
+        cand = base + order
+        is_meta = tab["slot_is_meta"][cand]
+        hosted = tab["leaf_hosted"][cand]
+        hosted_free = jnp.where(
+            hosted >= 0,
+            st["leaf_cnt"][jnp.clip(hosted, 0, g.n_leaf - 1)] == 0,
+            False)
+        ok = jnp.where(is_meta, hosted_free, True)
+        if track:
+            ok &= cand != tab["slot_of_leaf"][lf_of(b)]
+            self_host = tab["slot_of_leaf"][li_of(cand)] == cand
+            ok &= ~(is_meta & self_host)
+        pos = jnp.argmax(ok).astype(jnp.int32)   # first admissible candidate
+        return cand[pos], pos
+
+    def commit_fifo(st, s, pos, enable):
+        st["fifo_ptr"] = _madd(st["fifo_ptr"], s, pos + 1, enable)
+        st["fifo_ptr"] = st["fifo_ptr"] % g.k
+        return st
+
+    def install_copy(st, b, v, is_write, enable):
+        """Cache ``b`` (a copy) into slot ``v`` (cache mode, or a flat-mode
+        lendable metadata slot)."""
+        st, _ = copy_evict(st, v, enable)
+        vv = jnp.where(enable, v, 0)
+        is_meta = tab["slot_is_meta"][vv]
+        st["slot_owner"] = _mset(st["slot_owner"], v, b, enable)
+        st["slot_dirty"] = _mset(st["slot_dirty"], v, is_write, enable)
+        st["remap"] = _mset(st["remap"], b, v, enable)
+        if track:
+            st["leaf_cnt"] = _madd(st["leaf_cnt"], lf_of(b), 1, enable)
+            st["leaf_cnt"] = _madd(st["leaf_cnt"], li_of(v), 1, enable & is_meta)
+            st = force_evict_hosted(st, lf_of(b), enable)
+            st = force_evict_hosted(st, li_of(v), enable & is_meta)
+        st.update(irc_ops.invalidate(cfg, st, b, enable))
+        _bump(st, "by_slow_rd", jnp.where(enable, blk, 0))
+        _bump(st, "by_fast", jnp.where(enable, blk, 0))
+        _bump(st, "installs", jnp.where(enable, 1, 0))
+        return st
+
+    def install_swap(st, b, v, enable):
+        """Flat mode: migrate slow-home ``b`` into data slot ``v`` under the
+        slow-swap policy (Section 3.2: evicted blocks return to their initial
+        location; blocks never move between two non-original places)."""
+        fb = home_block(g, v)
+        vv = jnp.where(enable, v, 0)
+        o = st["slot_owner"][vv]
+        o_is_migrant = enable & (o >= 0) & (o != fb)
+        # 1. a resident migrant goes back to its own slow home
+        st["remap"] = _mset(st["remap"], o, IDENTITY, o_is_migrant)
+        if track:
+            st["leaf_cnt"] = _madd(st["leaf_cnt"], lf_of(o), -1, o_is_migrant)
+        st.update(irc_ops.invalidate(cfg, st, o, o_is_migrant, becomes_identity=True))
+        _bump(st, "by_fast", jnp.where(o_is_migrant, blk, 0))
+        _bump(st, "by_slow_wr", jnp.where(o_is_migrant, blk, 0))
+        # 2. the displaced home block fb takes over b's slow home
+        hb = b - g.fast_home_blocks
+        fbv = jnp.where(enable, fb, 0)
+        fb_was_home = st["remap"][fbv] == IDENTITY
+        st["remap"] = _mset(st["remap"], fb, -(hb + 2), enable)
+        if track:
+            st["leaf_cnt"] = _madd(st["leaf_cnt"], lf_of(fb), 1,
+                                   enable & fb_was_home)
+        st.update(irc_ops.invalidate(cfg, st, fb, enable))
+        _bump(st, "by_slow_wr", jnp.where(enable, blk, 0))
+        _bump(st, "by_slow_rd", jnp.where(enable & ~fb_was_home, blk, 0))
+        _bump(st, "by_fast", jnp.where(enable & fb_was_home, blk, 0))
+        # 3. b moves into v
+        st["remap"] = _mset(st["remap"], b, v, enable)
+        st["slot_owner"] = _mset(st["slot_owner"], v, b, enable)
+        st["slot_dirty"] = _mset(st["slot_dirty"], v, False, enable)
+        if track:
+            st["leaf_cnt"] = _madd(st["leaf_cnt"], lf_of(b), 1, enable)
+            st = force_evict_hosted(st, lf_of(b), enable)
+            st = force_evict_hosted(st, lf_of(fb), enable)
+        st.update(irc_ops.invalidate(cfg, st, b, enable))
+        _bump(st, "by_slow_rd", jnp.where(enable, blk, 0))
+        _bump(st, "by_fast", jnp.where(enable, blk, 0))
+        _bump(st, "swaps", jnp.where(enable, 1, 0))
+        return st
+
+    # -- the step ----------------------------------------------------------
+    def step(st, xs):
+        b, is_write, dealloc = xs
+        b = b.astype(jnp.int32)
+        s = b & (g.n_sets - 1)
+
+        if cfg.dealloc_hints:
+            # Section 3.5 (beyond-paper): the OS tells the controller the
+            # block is dead -> recycle its entry, free its slot, skip the
+            # writeback.  Costs nothing on the critical path.
+            m0 = st["remap"][b]
+            freed = dealloc & (m0 >= 0)
+            # displaced flat-mode blocks (m0 <= -2) keep their entry: the
+            # swap partner still depends on it
+            clearable = dealloc & (m0 >= IDENTITY)
+            slot0 = jnp.maximum(m0, 0)
+            st["remap"] = _mset(st["remap"], b, IDENTITY, clearable)
+            st["slot_owner"] = _mset(st["slot_owner"], slot0, -1, freed)
+            st["slot_dirty"] = _mset(st["slot_dirty"], slot0, False, freed)
+            if track:
+                st["leaf_cnt"] = _madd(st["leaf_cnt"], lf_of(b), -1, freed)
+                is_meta0 = tab["slot_is_meta"][slot0]
+                st["leaf_cnt"] = _madd(st["leaf_cnt"], li_of(slot0), -1,
+                                       freed & is_meta0)
+            st.update(irc_ops.invalidate(cfg, st, b, clearable,
+                                         becomes_identity=True))
+            if "touch" in st:
+                st["touch"] = _mset(st["touch"], b, 0, dealloc)
+            _bump(st, "deallocs", jnp.where(dealloc, 1, 0))
+            is_write = is_write & ~dealloc
+            skip = dealloc
+        else:
+            skip = jnp.bool_(False)
+
+        _bump(st, "n_acc", jnp.where(skip, 0, 1))
+        st["step"] = st["step"] + 1
+
+        # 1. metadata lookup: remap cache probe, then table walk on a miss
+        m = st["remap"][b]                     # ground truth == table content
+        if cfg.remap_cache == "ideal":
+            hit = jnp.bool_(True)
+            walk = jnp.bool_(False)
+        else:
+            hit, val, id_hit = irc_ops.probe(cfg, st, b)
+            hit = hit | skip
+            walk = ~hit
+            _bump(st, "rc_incons", jnp.where(hit & (val != m), 1, 0))
+            _bump(st, "rc_hit", jnp.where(hit, 1, 0))
+            _bump(st, "rc_id_hit", jnp.where(id_hit, 1, 0))
+            _bump(st, "rc_nid_hit", jnp.where(hit & ~id_hit, 1, 0))
+            _bump(st, "walks", jnp.where(walk, 1, 0))
+            _bump(st, "cyc_sram", timing.t_sram)
+            _bump(st, "cyc_meta", jnp.where(walk, timing.t_fast_meta, 0))
+            n_meta_acc = cfg.irt_levels if cfg.meta == "irt" else 1
+            _bump(st, "by_fast", jnp.where(walk, acc * n_meta_acc, 0))
+            st.update(irc_ops.fill(cfg, st, b, m, st["remap"], walk))
+
+        # 2. data access
+        if is_flat:
+            at_fast_home = (m == IDENTITY) & (b < g.fast_home_blocks)
+        else:
+            at_fast_home = jnp.bool_(False)
+        in_fast = ((m >= 0) | at_fast_home) & ~skip
+        _bump(st, "serve_fast", jnp.where(in_fast, 1, 0))
+        _bump(st, "cyc_fast", jnp.where(in_fast, timing.t_fast, 0))
+        _bump(st, "cyc_slow", jnp.where(in_fast | skip, 0, timing.t_slow_rd))
+        _bump(st, "by_fast", jnp.where(in_fast, acc, 0))
+        _bump(st, "by_slow_rd", jnp.where(~in_fast & ~is_write & ~skip, acc, 0))
+        _bump(st, "by_slow_wr", jnp.where(~in_fast & is_write & ~skip, acc, 0))
+        st["slot_dirty"] = _mset(st["slot_dirty"], jnp.maximum(m, 0), True,
+                                 is_write & (m >= 0))
+
+        # 3. fill / migrate on a fast-tier miss
+        miss = ~in_fast & ~skip
+        if cfg.mode == "cache":
+            do_install = miss
+            if cfg.install_threshold > 0:
+                st["touch"] = _madd(st["touch"], b, 1, miss)
+                do_install = miss & (st["touch"][b] >= cfg.install_threshold)
+                st["touch"] = _mset(st["touch"], b, 0, do_install)
+                decay = (st["step"]
+                         & ((1 << cfg.counter_decay_shift) - 1)) == 0
+                st["touch"] = jnp.where(decay, st["touch"] >> 1, st["touch"])
+            v, pos = pick_victim(st, b, s)
+            st = commit_fifo(st, s, pos, do_install)
+            st = install_copy(st, b, v, is_write, do_install)
+        else:
+            movable = miss & (b >= g.fast_home_blocks)   # displaced fast-home
+            st["touch"] = _madd(st["touch"], b, 1, movable)  # blocks stay put
+            hot = movable & (st["touch"][b] >= cfg.migrate_threshold)
+            v, pos = pick_victim(st, b, s)
+            st = commit_fifo(st, s, pos, hot)
+            v_is_meta = tab["slot_is_meta"][v]
+            st = install_copy(st, b, v, is_write, hot & v_is_meta)
+            st = install_swap(st, b, v, hot & ~v_is_meta)
+            st["touch"] = _mset(st["touch"], b, 0, hot)
+            decay = (st["step"] & ((1 << cfg.counter_decay_shift) - 1)) == 0
+            st["touch"] = jnp.where(decay, st["touch"] >> 1, st["touch"])
+        return st, None
+
+    return step, g
+
+
+# ---------------------------------------------------------------------------
+# tag-matching baselines (Alloy, Loh-Hill)
+# ---------------------------------------------------------------------------
+
+def make_step_tagmatch(cfg: SimConfig, timing: TimingModel):
+    """Alloy Cache (direct-mapped, perfect MAP) / Loh-Hill (30-way, perfect
+    MissMap) — the Section 4 cache-mode baselines.  Tags live with the data
+    so there is no separate metadata region; FIFO replacement within sets
+    (our stand-in for RRIP, noted in DESIGN.md)."""
+    blk, acc = cfg.block_bytes, cfg.access_bytes
+    n_slots = cfg.fast_total_blocks
+    ways = cfg.tag_ways or (30 if cfg.meta == "lohhill" else 1)
+    n_sets_lh = max(n_slots // ways, 1)
+    # tag storage read per probe: ways x 4 B entries in 64 B bursts
+    n_tag_bursts = -(-ways * cfg.entry_bytes // cfg.access_bytes)
+
+    def step(st, xs):
+        b, is_write, _dealloc = xs
+        b = b.astype(jnp.int32)
+        _bump(st, "n_acc", 1)
+        s = b % n_sets_lh
+        slot0 = s * ways
+        owners = jax.lax.dynamic_slice(st["slot_owner"], (slot0,), (ways,))
+        match = owners == b
+        hit = match.any()
+        way = jnp.argmax(match).astype(jnp.int32)
+        slot = slot0 + jnp.where(hit, way, st["fifo_ptr"][0] % ways)
+
+        if cfg.meta == "lohhill" or cfg.tag_ways:
+            # tag read from the same DRAM row before the data access;
+            # > 16 tags need multiple 64 B bursts (Section 2.2)
+            _bump(st, "cyc_meta",
+                  jnp.where(hit, timing.t_fast_meta * n_tag_bursts, 0))
+            _bump(st, "by_fast", jnp.where(hit, n_tag_bursts * acc, 0))
+        _bump(st, "serve_fast", jnp.where(hit, 1, 0))
+        _bump(st, "cyc_fast", jnp.where(hit, timing.t_fast, 0))
+        _bump(st, "cyc_slow", jnp.where(hit, 0, timing.t_slow_rd))
+        _bump(st, "by_fast", jnp.where(hit, acc, 0))
+        _bump(st, "by_slow_rd", jnp.where(hit, 0, acc))
+
+        st["slot_dirty"] = _mset(st["slot_dirty"], slot, True, hit & is_write)
+        miss = ~hit
+        o = st["slot_owner"][slot]
+        dirty_evict = miss & (o >= 0) & st["slot_dirty"][slot]
+        _bump(st, "by_fast", jnp.where(dirty_evict, blk, 0))
+        _bump(st, "by_slow_wr", jnp.where(dirty_evict, blk, 0))
+        _bump(st, "writebacks", jnp.where(dirty_evict, 1, 0))
+        st["slot_owner"] = _mset(st["slot_owner"], slot, b, miss)
+        st["slot_dirty"] = _mset(st["slot_dirty"], slot, is_write, miss)
+        _bump(st, "by_slow_rd", jnp.where(miss, blk, 0))
+        _bump(st, "by_fast", jnp.where(miss, blk, 0))
+        _bump(st, "installs", jnp.where(miss, 1, 0))
+        st["fifo_ptr"] = st["fifo_ptr"].at[0].add(jnp.where(miss, 1, 0))
+        return st, None
+
+    def init():
+        st = {
+            "slot_owner": jnp.full((n_sets_lh * ways,), -1, jnp.int32),
+            "slot_dirty": jnp.zeros((n_sets_lh * ways,), jnp.bool_),
+            "fifo_ptr": jnp.zeros((1,), jnp.int32),
+        }
+        for c in COUNTERS:
+            st[c] = jnp.zeros((), jnp.int32)
+        return st
+
+    return step, init
+
+
+# ---------------------------------------------------------------------------
+# run + metrics
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=64)
+def _compiled(cfg: SimConfig, timing: TimingModel):
+    if cfg.meta in ("alloy", "lohhill"):
+        step, init = make_step_tagmatch(cfg, timing)
+        g = None
+    else:
+        step, g = make_step(cfg, timing)
+        init = functools.partial(init_state, cfg, g)
+
+    @jax.jit
+    def runner(state, blocks, writes, deallocs):
+        state, _ = jax.lax.scan(step, state, (blocks, writes, deallocs))
+        return state
+
+    return runner, init, g
+
+
+def run(cfg: SimConfig, timing: TimingModel, blocks: np.ndarray,
+        writes: np.ndarray, deallocs: np.ndarray | None = None) -> dict:
+    """Simulate one trace; returns raw counters + derived metrics."""
+    assert len(blocks) * 1024 < 2 ** 31, "int32 counter headroom"
+    assert int(blocks.max()) < cfg.n_phys, "trace exceeds physical space"
+    runner, init, g = _compiled(cfg, timing)
+    if deallocs is None:
+        deallocs = np.zeros(len(blocks), bool)
+    state = runner(init(), jnp.asarray(blocks, jnp.int32),
+                   jnp.asarray(writes, jnp.bool_),
+                   jnp.asarray(deallocs, jnp.bool_))
+    out = {c: int(state[c]) for c in COUNTERS}
+    out.update(derive_metrics(cfg, timing, out))
+    out["metadata_blocks"] = metadata_blocks(cfg, g, state)
+    out["_state"] = state
+    return out
+
+
+def metadata_blocks(cfg: SimConfig, g: Geometry | None, state: dict) -> int:
+    """Current metadata footprint in fast-tier blocks (Figure 9)."""
+    if cfg.meta in ("ideal", "alloy", "lohhill"):
+        return 0
+    if cfg.meta == "linear" or cfg.irt_levels == 1:
+        return cfg.meta_reserved_blocks
+    alloc = int((np.asarray(state["leaf_cnt"]) > 0).sum())
+    return alloc + g.n_inter + g.n_sets  # leaves + intermediates + tag roots
+
+
+def derive_metrics(cfg: SimConfig, timing: TimingModel, c: dict) -> dict:
+    """Loaded-latency timing: per-tier latencies inflate with utilisation
+    (1/(1-rho) queueing, solved self-consistently), so bandwidth pressure
+    on the slow tier — the regime the paper's 16-core host lives in —
+    feeds back into AMAT.  Unloaded latencies come from Table 1."""
+    n = max(c["n_acc"], 1)
+    t_fast_bw = c["by_fast"] / timing.bw_fast
+    t_slow_bw = (c["by_slow_rd"] / timing.bw_slow
+                 + c["by_slow_wr"] / (timing.bw_slow / timing.slow_wr_mult))
+    lat0 = c["cyc_sram"] + c["cyc_meta"] + c["cyc_fast"] + c["cyc_slow"]
+    total = max(lat0 / timing.mlp, t_fast_bw, t_slow_bw)
+    for _ in range(12):                      # fixed-point on loaded latency
+        rho_f = min(t_fast_bw / max(total, 1e-9), 0.95)
+        rho_s = min(t_slow_bw / max(total, 1e-9), 0.95)
+        lat = (c["cyc_sram"]
+               + (c["cyc_meta"] + c["cyc_fast"]) / (1 - rho_f)
+               + c["cyc_slow"] / (1 - rho_s))
+        total = max(lat / timing.mlp, t_fast_bw, t_slow_bw)
+    t_lat = lat / timing.mlp
+    return {
+        "amat": lat / n,
+        "amat_meta": (c["cyc_sram"] + c["cyc_meta"] / (1 - rho_f)) / n,
+        "amat_fast": c["cyc_fast"] / (1 - rho_f) / n,
+        "amat_slow": c["cyc_slow"] / (1 - rho_s) / n,
+        "serve_rate": c["serve_fast"] / n,
+        "rc_hit_rate": c["rc_hit"] / n,
+        "rc_id_hit_rate": c["rc_id_hit"] / n,
+        "bloat": c["by_fast"] / (n * cfg.access_bytes),
+        "t_total": total,
+        "t_lat": t_lat, "t_fast_bw": t_fast_bw, "t_slow_bw": t_slow_bw,
+        "bound": ["lat", "fast_bw", "slow_bw"][int(np.argmax(
+            [t_lat, t_fast_bw, t_slow_bw]))],
+    }

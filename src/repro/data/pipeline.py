@@ -1,0 +1,84 @@
+"""Deterministic, seekable synthetic data pipeline.
+
+Every batch is a pure function of (seed, step, host_shard) — no iterator
+state to checkpoint, restarts are bitwise reproducible on any host/mesh
+layout, and elastic re-sharding is free: a restarted job with a different
+data-parallel size just recomputes its shard slices.  This is the property
+real frameworks buy with heavyweight checkpointable input pipelines; a
+synthetic corpus gives it for free (DESIGN.md §5 fault tolerance).
+
+The token stream is a mixture of Zipf-distributed vocabulary draws and
+repeated n-gram motifs so that a ~100M model shows a clearly decreasing
+loss within a few hundred steps (examples/train_tiny_lm.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    motif_len: int = 16
+    n_motifs: int = 256
+    motif_frac: float = 0.5
+    embed_dim: int = 0          # >0: emit frame embeddings (audio stub)
+
+
+def _motif_table(cfg: DataConfig) -> np.ndarray:
+    rng = np.random.default_rng(cfg.seed ^ 0x5EED)
+    return rng.integers(0, cfg.vocab, size=(cfg.n_motifs, cfg.motif_len),
+                        dtype=np.int32)
+
+
+def make_batch(cfg: DataConfig, step: int, *, shard: int = 0,
+               n_shards: int = 1) -> dict:
+    """Batch for ``step``; host ``shard`` of ``n_shards`` gets rows
+    [shard*B/n, (shard+1)*B/n).  Pure numpy -> feeds device puts."""
+    assert cfg.global_batch % n_shards == 0
+    b = cfg.global_batch // n_shards
+    rows = np.arange(shard * b, (shard + 1) * b, dtype=np.int64)
+    S = cfg.seq_len
+
+    # per-row generator seeded by (seed, step, row): seekable + shardable
+    ss = np.random.SeedSequence([cfg.seed, int(step)])
+    child = ss.spawn(cfg.global_batch)
+    toks = np.empty((b, S + 1), np.int32)
+    motifs = _motif_table(cfg)
+    for i, r in enumerate(rows):
+        rng = np.random.default_rng(child[int(r)])
+        # zipf-ish backbone
+        u = rng.random(S + 1)
+        base = np.minimum((cfg.vocab ** u - 1.0) / max(cfg.vocab - 1, 1)
+                          * cfg.vocab, cfg.vocab - 1).astype(np.int32)
+        # overlay motifs at random offsets
+        n_m = int(S * cfg.motif_frac / cfg.motif_len)
+        offs = rng.integers(0, max(S + 1 - cfg.motif_len, 1), size=n_m)
+        ids = rng.integers(0, cfg.n_motifs, size=n_m)
+        for o, m in zip(offs, ids):
+            base[o:o + cfg.motif_len] = motifs[m]
+        toks[i] = base
+
+    batch = {"tokens": toks[:, :S], "labels": toks[:, 1:S + 1].copy()}
+    if cfg.embed_dim:
+        rng = np.random.default_rng([cfg.seed, int(step), 7])
+        batch["embeds"] = rng.standard_normal(
+            (b, S, cfg.embed_dim), dtype=np.float32)
+        batch.pop("tokens")
+    return batch
+
+
+def device_batch(cfg: DataConfig, step: int, mesh=None, shardings=None):
+    """make_batch + device_put under the given shardings (or local)."""
+    host = make_batch(cfg, step)
+    if shardings is None:
+        return {k: jnp.asarray(v) for k, v in host.items()}
+    return {k: jax.device_put(v, shardings[k]) for k, v in host.items()}

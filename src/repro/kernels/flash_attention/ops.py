@@ -1,0 +1,32 @@
+"""jit'd public wrapper: layout adaptation + interpret fallback on CPU."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .flash_attention import flash_attention
+from .ref import attention_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "impl"))
+def flash_attention_op(q, k, v, *, causal: bool = True, window: int = 0,
+                       impl: str = "auto"):
+    """Model-layout wrapper: q [B,S,H,hd]; k,v [B,T,KV,hd] -> [B,S,H,hd].
+
+    impl: 'kernel' (Pallas, interpret-mode off-TPU), 'ref', or 'auto'
+    (kernel on TPU, ref elsewhere — the dry-run/roofline path)."""
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        out = attention_ref(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                            v.transpose(0, 2, 1, 3), causal=causal,
+                            window=window)
+        return out.transpose(0, 2, 1, 3)
+    out = flash_attention(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                          v.transpose(0, 2, 1, 3), causal=causal,
+                          window=window, interpret=not _on_tpu())
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import jax
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q [B,H,S,hd]; k,v [B,KV,T,hd] -> [B,H,S,hd] (GQA by repetition)."""
+    B, H, S, hd = q.shape
+    KV, T = k.shape[1], k.shape[2]
+    G = H // KV
+    k = jnp.repeat(k, G, axis=1)
+    v = jnp.repeat(v, G, axis=1)
+    s = jnp.einsum("bhsk,bhtk->bhst", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / (hd ** 0.5)
+    qi = jnp.arange(S)[:, None]
+    ki = jnp.arange(T)[None, :]
+    ok = jnp.ones((S, T), jnp.bool_)
+    if causal:
+        ok &= ki <= qi
+    if window > 0:
+        ok &= ki > qi - window
+    s = jnp.where(ok, s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhst,bhtk->bhsk", w,
+                      v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,22 @@
+"""jit'd public wrapper for the iRT lookup kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .irt_lookup import irt_lookup
+from .ref import irt_lookup_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def irt_lookup_op(ids, home, l1_bits, leaf_table, *, impl: str = "auto"):
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        return irt_lookup_ref(ids, home, l1_bits, leaf_table)
+    return irt_lookup(ids, home, l1_bits, leaf_table,
+                      interpret=not _on_tpu())

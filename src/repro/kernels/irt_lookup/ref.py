@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the iRT walk."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+INVALID = -1
+E = 64
+
+
+def irt_lookup_ref(ids, home, l1_bits, leaf_table):
+    leaf = ids // E
+    word = leaf // 32
+    bit = (leaf % 32).astype(jnp.uint32)
+    allocated = ((l1_bits[word].astype(jnp.uint32) >> bit)
+                 & jnp.uint32(1)) == 1
+    entries = leaf_table[ids]
+    hit = allocated & (entries != INVALID)
+    return jnp.where(hit, entries, home).astype(jnp.int32)

@@ -1,0 +1,23 @@
+"""jit'd public wrapper for paged decode attention."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .paged_attention import paged_attention
+from .ref import paged_attention_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def paged_attention_op(q, k_pool, v_pool, page_table, seq_lens,
+                       *, impl: str = "auto"):
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        return paged_attention_ref(q, k_pool, v_pool, page_table, seq_lens)
+    return paged_attention(q, k_pool, v_pool, page_table, seq_lens,
+                           interpret=not _on_tpu())

@@ -1,0 +1,106 @@
+"""Paged decode attention as a Pallas TPU kernel (the Trimma consumer).
+
+One new token per sequence attends to a KV cache stored as fixed-size pages
+in a physical pool; the *page table* rows (already translated through
+iRT/iRC — see repro.tiered.kvcache) are passed as a scalar-prefetch operand
+so the K/V BlockSpec index maps can chase the Trimma pointers: page j of
+sequence b physically lives at pool slot ``page_table[b, j]``.  This is the
+paper's "every access must translate physical->device" fused directly into
+the data access, and the TPU analogue of its parallel fixed-location lookup
+(Section 3.2): the index map *is* the lookup.
+
+Grid: (B, KV, n_pages), pages sequential for the online softmax.
+VMEM working set per step: one (page, hd) K tile + V tile + [G, hd]
+accumulator — hardware-aligned for page=128, hd=128.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(page_table, seq_lens,          # scalar prefetch
+            q_ref, kp_ref, vp_ref, o_ref,
+            acc_ref, m_ref, l_ref, *,
+            scale: float, page: int, npages: int):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # [G, hd]
+    k = kp_ref[0, 0].astype(jnp.float32)           # [page, hd]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    pos = j * page + jax.lax.broadcasted_iota(jnp.int32, (1, page), 1)
+    valid = pos < seq_lens[b]                      # [1, page]
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p, vp_ref[0, 0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(j == npages - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def paged_attention(q, k_pool, v_pool, page_table, seq_lens, *,
+                    interpret: bool = False):
+    """q [B,KV,G,hd]; pools [n_slots, KV, page, hd];
+    page_table [B, npages] int32 (Trimma-translated device slots);
+    seq_lens [B] int32.  Returns [B,KV,G,hd]."""
+    B, KV, G, hd = q.shape
+    n_slots, _, page, _ = k_pool.shape
+    npages = page_table.shape[1]
+    scale = 1.0 / (hd ** 0.5)
+
+    kernel = functools.partial(_kernel, scale=scale, page=page,
+                               npages=npages)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, KV, npages),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd),
+                         lambda b, h, j, pt, sl: (b, h, 0, 0)),
+            # the Trimma pointer chase: pool slot = page_table[b, j]
+            pl.BlockSpec((1, 1, page, hd),
+                         lambda b, h, j, pt, sl: (pt[b, j], h, 0, 0)),
+            pl.BlockSpec((1, 1, page, hd),
+                         lambda b, h, j, pt, sl: (pt[b, j], h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd),
+                               lambda b, h, j, pt, sl: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, hd), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(page_table, seq_lens, q, k_pool, v_pool)

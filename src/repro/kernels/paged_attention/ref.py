@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for paged decode attention."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def paged_attention_ref(q, k_pool, v_pool, page_table, seq_lens):
+    """q [B,KV,G,hd]; pools [n_slots,KV,page,hd]; page_table [B,npages];
+    seq_lens [B] -> [B,KV,G,hd]."""
+    B, KV, G, hd = q.shape
+    page = k_pool.shape[2]
+    npages = page_table.shape[1]
+    # gather pages -> [B, KV, npages*page, hd]
+    k = k_pool[page_table]                      # [B,npages,KV,page,hd]
+    v = v_pool[page_table]
+    k = k.transpose(0, 2, 1, 3, 4).reshape(B, KV, npages * page, hd)
+    v = v.transpose(0, 2, 1, 3, 4).reshape(B, KV, npages * page, hd)
+    s = jnp.einsum("bkgh,bkth->bkgt", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / (hd ** 0.5)
+    pos = jnp.arange(npages * page)[None, None, None, :]
+    s = jnp.where(pos < seq_lens[:, None, None, None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bkgt,bkth->bkgh", w,
+                      v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,28 @@
+"""jit'd public wrapper for the migration gather/scatter."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .remap_gather import remap_gather
+from .ref import remap_gather_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def remap_gather_op(pool, idx, *, impl: str = "auto"):
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        return remap_gather_ref(pool, idx)
+    return remap_gather(pool, idx, interpret=not _on_tpu())
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def remap_scatter_op(pool, idx, blocks):
+    """pool[idx[i]] = blocks[i] (migration fill direction)."""
+    return pool.at[idx].set(blocks)

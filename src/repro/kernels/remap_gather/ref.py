@@ -1,0 +1,7 @@
+"""Pure-jnp oracle for the migration gather."""
+
+import jax.numpy as jnp
+
+
+def remap_gather_ref(pool, idx):
+    return jnp.take(pool, idx, axis=0)

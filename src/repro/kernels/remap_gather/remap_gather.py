@@ -1,0 +1,39 @@
+"""Block migration engine: page gather between pools as a Pallas TPU kernel.
+
+Trimma moves 256 B blocks between tiers; on TPU the natural granule is a KV
+page ((page, hd) tile).  This kernel implements the gather half of the
+migration engine: out[i] = pool[idx[i]] with the indices scalar-prefetched
+so each grid step's source block address is known before the DMA is issued
+— Pallas double-buffers the HBM->VMEM->HBM pipeline automatically.  The
+scatter direction reuses the same kernel with inverted index semantics
+(see ops.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(idx, src_ref, out_ref):
+    out_ref[...] = src_ref[...]
+
+
+def remap_gather(pool, idx, *, interpret: bool = False):
+    """pool [n_slots, rows, cols]; idx [n_out] int32 -> [n_out, rows, cols]."""
+    n_slots, rows, cols = pool.shape
+    (n_out,) = idx.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_out,),
+        in_specs=[pl.BlockSpec((1, rows, cols), lambda i, idx: (idx[i], 0, 0))],
+        out_specs=pl.BlockSpec((1, rows, cols), lambda i, idx: (i, 0, 0)),
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_out, rows, cols), pool.dtype),
+        interpret=interpret,
+    )(idx, pool)

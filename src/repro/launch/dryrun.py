@@ -1,0 +1,164 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run driver (deliverable e).
+
+For every (architecture x input-shape) cell, lower + compile the real step
+function (train_step / prefill_step / serve_step) against the production
+mesh — 16x16 ('data','model') single-pod and 2x16x16 ('pod','data','model')
+multi-pod — using ShapeDtypeStruct stand-ins (no allocation), and record
+
+  * compiled.memory_analysis()  -> bytes/device: proves the cell fits
+  * compiled.cost_analysis()    -> FLOPs / bytes for the roofline
+  * collective bytes parsed from the compiled HLO (utils/hlo_analysis.py)
+
+Results append to benchmarks/results/dryrun_<mesh>.jsonl; re-runs skip
+completed cells (the sweep is resumable).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--force]
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool) -> dict:
+    import jax
+    from repro.configs import SHAPES, get_config
+    from repro.configs.base import cell_supported
+    from repro.launch.mesh import make_production_mesh
+    from repro.models import abstract_params_and_axes, input_specs
+    from repro.serve.decode import batch_shardings, jit_decode, jit_prefill
+    from repro.sharding.specs import spec_for, tree_shardings, use_mesh
+    from repro.train.loop import TrainConfig, make_train_step
+    from repro.train.optimizer import OptConfig, init_opt_state
+    from repro.utils.hlo_analysis import collective_bytes, summarize_cost
+    from jax.sharding import NamedSharding
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = cell_supported(cfg, shape)
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16"}
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    with use_mesh(mesh):
+        if shape.kind == "train":
+            tc = TrainConfig(remat=os.environ.get("REPRO_REMAT", "full"),
+                             microbatches=int(
+                                 os.environ.get("REPRO_MICROBATCHES", "1")))
+            step = make_train_step(cfg, OptConfig(), tc)
+            params_abs, axes = abstract_params_and_axes(cfg)
+            p_sh = tree_shardings(axes, mesh, params_abs)
+            opt_abs = jax.eval_shape(init_opt_state, params_abs)
+            repl = NamedSharding(mesh, spec_for((), mesh=mesh))
+            from repro.train.optimizer import OptState
+            o_sh = OptState(repl, p_sh, p_sh)
+            specs = input_specs(cfg, shape)
+            b_sh = batch_shardings(specs, mesh)
+            fn = jax.jit(step, in_shardings=(p_sh, o_sh, None, b_sh),
+                         out_shardings=(p_sh, o_sh, None, None),
+                         donate_argnums=(0, 1))
+            lowered = fn.lower(params_abs, opt_abs, None, specs)
+        elif shape.kind == "prefill":
+            fn, (params_abs, specs) = jit_prefill(cfg, shape, mesh)
+            lowered = fn.lower(params_abs, specs)
+        else:  # decode
+            fn, (params_abs, state_abs, t_abs) = jit_decode(cfg, shape, mesh)
+            lowered = fn.lower(params_abs, state_abs, t_abs)
+        compiled = lowered.compile()
+
+    t_compile = time.time() - t0
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    coll = collective_bytes(compiled.as_text())
+    rec.update(
+        status="ok",
+        compile_s=round(t_compile, 1),
+        cost=summarize_cost(cost),
+        collectives=coll,
+        memory={k: getattr(mem, k) for k in (
+            "argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "generated_code_size_in_bytes")
+            if hasattr(mem, k)},
+        n_devices=mesh.devices.size,
+        params=cfg.n_params(),
+        active_params=cfg.n_active_params(),
+    )
+    return rec
+
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__),
+                           "..", "..", "..", "benchmarks", "results")
+
+
+def _done_cells(path: str) -> set:
+    done = set()
+    if os.path.exists(path):
+        with open(path) as f:
+            for line in f:
+                try:
+                    r = json.loads(line)
+                    if r.get("status") in ("ok", "skipped"):
+                        done.add((r["arch"], r["shape"]))
+                except json.JSONDecodeError:
+                    pass
+    return done
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    from repro.configs import ALL_ARCHS, SHAPES
+
+    mesh_tag = "2x16x16" if args.multi_pod else "16x16"
+    os.makedirs(os.path.abspath(RESULTS_DIR), exist_ok=True)
+    out_path = args.out or os.path.abspath(
+        os.path.join(RESULTS_DIR, f"dryrun_{mesh_tag}.jsonl"))
+
+    cells = ([(args.arch, args.shape)] if args.arch and args.shape else
+             [(a, s) for a in ALL_ARCHS for s in SHAPES])
+    done = set() if args.force else _done_cells(out_path)
+
+    for arch, shape in cells:
+        if (arch, shape) in done:
+            print(f"[skip-done] {arch} x {shape}")
+            continue
+        print(f"[dryrun] {arch} x {shape} on {mesh_tag} ...", flush=True)
+        try:
+            rec = run_cell(arch, shape, args.multi_pod)
+        except Exception as e:
+            rec = {"arch": arch, "shape": shape, "mesh": mesh_tag,
+                   "status": "error", "error": f"{type(e).__name__}: {e}",
+                   "trace": traceback.format_exc()[-2000:]}
+        with open(out_path, "a") as f:
+            f.write(json.dumps(rec) + "\n")
+        msg = rec["status"]
+        if rec["status"] == "ok":
+            msg += (f" compile={rec['compile_s']}s "
+                    f"flops={rec['cost'].get('flops', 0):.3e} "
+                    f"coll={rec['collectives'].get('total_bytes', 0):.3e}B")
+        elif rec["status"] == "error":
+            msg += " " + rec["error"][:200]
+        print(f"[dryrun] {arch} x {shape}: {msg}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Production mesh construction (dry-run target: TPU v5e pods).
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so that
+importing this module never touches jax device state — the dry-run driver
+must set XLA_FLAGS before the first jax init (see launch/dryrun.py).
+"""
+
+from __future__ import annotations
+
+import jax
+
+# TPU v5e hardware constants used by the roofline (benchmarks/roofline.py)
+PEAK_FLOPS_BF16 = 197e12        # per chip
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_BW_LINK = 50e9              # bytes/s per link (~3 usable links/chip v5e)
+HBM_BYTES = 16 * 2 ** 30        # 16 GiB per chip
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_parallel: int = 1):
+    """Mesh over whatever devices exist (CPU tests, examples)."""
+    n = len(jax.devices())
+    assert n % model_parallel == 0
+    return jax.make_mesh((n // model_parallel, model_parallel),
+                         ("data", "model"))
+
+
+def mesh_chip_count(mesh) -> int:
+    return mesh.devices.size

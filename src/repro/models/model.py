@@ -1,0 +1,58 @@
+"""Public model facade: abstract input specs per (arch x shape) cell and
+thin wrappers used by the launcher, dry-run and examples."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig, cell_supported
+
+from . import transformer
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell
+    (weak-type-correct, shardable, no device allocation)."""
+    ok, why = cell_supported(cfg, shape)
+    if not ok:
+        raise ValueError(f"{cfg.name} x {shape.name} unsupported: {why}")
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    dt = jnp.dtype(cfg.dtype)
+
+    if shape.kind in ("train", "prefill"):
+        specs = {}
+        if cfg.embed_inputs:  # audio: stubbed frame embeddings
+            specs["embeds"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), dt)
+        else:
+            specs["tokens"] = jax.ShapeDtypeStruct((B, S), i32)
+        if shape.kind == "train":
+            specs["labels"] = jax.ShapeDtypeStruct((B, S), i32)
+        if cfg.family == "vlm":
+            specs["image_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_image_tokens, cfg.d_model), dt)
+        return specs
+
+    # decode: one new token against a KV cache of length S
+    return {"tokens": jax.ShapeDtypeStruct((B,), i32)}
+
+
+def abstract_decode_state(cfg: ArchConfig, shape: ShapeConfig):
+    """ShapeDtypeStruct tree of the decode state for this cell."""
+    return jax.eval_shape(
+        lambda: transformer.init_decode_state(cfg, shape.global_batch,
+                                              shape.seq_len))
+
+
+def loss_fn(cfg: ArchConfig, params, batch, *, remat: str = "none"):
+    return transformer.lm_loss(cfg, params, batch, remat=remat)
+
+
+forward = transformer.forward
+prefill = transformer.prefill
+decode_step = transformer.decode_step
+init_params = transformer.init_params
+init_params_and_axes = transformer.init_params_and_axes
+abstract_params_and_axes = transformer.abstract_params_and_axes
+init_decode_state = transformer.init_decode_state

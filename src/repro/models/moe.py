@@ -1,0 +1,99 @@
+"""Mixture-of-Experts FFN with sort-based token dispatch (EP-friendly).
+
+Token-choice top-k routing; tokens are scattered into fixed-capacity
+[E, C, d] buffers (dropping on overflow), run through batched expert
+matmuls, and combined with router weights.  The [E, C, *] buffers shard
+cleanly under pjit: experts over 'model' when divisible, otherwise the
+expert matmuls shard their d_ff dimension (granite's 40 experts vs a
+16-way model axis — see sharding/specs.py and DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.sharding.specs import logical_constraint
+
+from .layers import dense_init
+
+
+def moe_init(key, cfg: ArchConfig) -> dict:
+    d, ff, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 4)
+    return {
+        "router": dense_init(ks[0], (d, E), ("embed", "expert"), jnp.float32),
+        "w_gate": dense_init(ks[1], (E, d, ff), ("expert", "embed", "mlp"), dt),
+        "w_up": dense_init(ks[2], (E, d, ff), ("expert", "embed", "mlp"), dt),
+        "w_down": dense_init(ks[3], (E, ff, d), ("expert", "mlp", "embed"), dt),
+    }
+
+
+def capacity(cfg: ArchConfig, n_tokens: int) -> int:
+    c = int(n_tokens * cfg.top_k * cfg.capacity_factor / cfg.n_experts)
+    return max(-(-c // 8) * 8, 8)
+
+
+def moe_ffn(p, x, cfg: ArchConfig):
+    """x [B,S,d] -> (y [B,S,d], aux_loss scalar).
+
+    REPRO_MOE_GROUPS=G (hillclimb, EXPERIMENTS.md §Perf): dispatch
+    independently within G batch groups aligned to the DP sharding, so the
+    argsort/capacity ranking never crosses device shards — the baseline's
+    global token sort drags cross-device collectives through the dispatch."""
+    B, S, d = x.shape
+    G = int(os.environ.get("REPRO_MOE_GROUPS", "0"))
+    if G > 1 and B % G == 0:
+        xg = x.reshape(G, (B // G) * S, d)
+        yg, aux = jax.vmap(lambda xi: _moe_tokens(p, xi, cfg))(xg)
+        return yg.reshape(B, S, d), aux.mean()
+    y, aux = _moe_tokens(p, x.reshape(B * S, d), cfg)
+    return y.reshape(B, S, d), aux
+
+
+def _moe_tokens(p, xf, cfg: ArchConfig):
+    """xf [T,d] -> (y [T,d], aux)."""
+    T, d = xf.shape
+    E, K = cfg.n_experts, cfg.top_k
+    C = capacity(cfg, T)
+
+    logits = (xf.astype(jnp.float32) @ p["router"])           # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, eidx = jax.lax.top_k(probs, K)                      # [T, K]
+    gate = gate / jnp.clip(gate.sum(-1, keepdims=True), 1e-9)
+
+    # load-balancing auxiliary loss (Switch-style)
+    frac = jnp.mean(jax.nn.one_hot(eidx[:, 0], E, dtype=jnp.float32), axis=0)
+    aux = E * jnp.sum(frac * probs.mean(0))
+
+    # --- dispatch: rank each (token, k) within its expert ------------------
+    flat_e = eidx.reshape(-1)                                  # [T*K]
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    first = jnp.searchsorted(sorted_e, jnp.arange(E), side="left")  # [E]
+    pos_sorted = jnp.arange(T * K, dtype=jnp.int32) - first[sorted_e]
+    pos = jnp.zeros((T * K,), jnp.int32).at[order].set(pos_sorted)
+    keep = pos < C
+    slot = jnp.where(keep, flat_e * C + pos, E * C)            # drop -> sink
+
+    xs = jnp.repeat(xf, K, axis=0)                             # [T*K, d]
+    buf = jnp.zeros((E * C + 1, d), xf.dtype).at[slot].add(xs)[:E * C]
+    h = buf.reshape(E, C, d)
+    h = logical_constraint(h, ("expert", "capacity", "embed_act"))
+
+    # --- expert swiglu ------------------------------------------------------
+    g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", h, p["w_gate"].astype(xf.dtype)))
+    u = jnp.einsum("ecd,edf->ecf", h, p["w_up"].astype(xf.dtype))
+    y = jnp.einsum("ecf,efd->ecd", g * u, p["w_down"].astype(xf.dtype))
+    y = logical_constraint(y, ("expert", "capacity", "embed_act"))
+
+    # --- combine ------------------------------------------------------------
+    yf = y.reshape(E * C, d)
+    gathered = yf[jnp.clip(slot, 0, E * C - 1)] * keep[:, None].astype(xf.dtype)
+    out = (gathered.reshape(T, K, d)
+           * gate.reshape(T, K, 1).astype(xf.dtype)).sum(axis=1)
+    return out, aux

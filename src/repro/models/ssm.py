@@ -1,0 +1,134 @@
+"""Selective state-space (Mamba-style) branch for the Hymba hybrid blocks.
+
+Hymba [arXiv:2411.13676] runs attention heads and Mamba heads *in parallel*
+within each block and averages their (normalised) outputs.  This module
+implements the Mamba branch: in-projection with gate, depthwise causal
+conv, selective SSM (input-dependent dt/B/C, diagonal A), computed with an
+associative scan over the sequence for train/prefill and a single-step
+state update for decode (O(1) state — the identity-mapped resident of the
+tiered store, DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+from .layers import Param, dense_init, zeros_init
+
+
+def ssm_init(key, cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    di = d                       # d_inner == d_model (parallel-branch sizing)
+    st = cfg.ssm_state
+    dt_rank = max(d // 16, 1)
+    dtp = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 6)
+    a_init = jnp.log(jnp.tile(jnp.arange(1, st + 1, dtype=jnp.float32), (di, 1)))
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * di), ("embed", "mlp"), dtp),
+        "conv_w": dense_init(ks[1], (cfg.ssm_conv, di), ("conv", "mlp"), dtp,
+                             scale=0.5),
+        "conv_b": zeros_init((di,), ("mlp",), dtp),
+        "x_proj": dense_init(ks[2], (di, dt_rank + 2 * st), ("mlp", None), dtp),
+        "dt_proj": dense_init(ks[3], (dt_rank, di), (None, "mlp"), dtp),
+        "dt_bias": Param(jnp.full((di,), -4.6, jnp.float32), ("mlp",)),  # softplus^-1(0.01)
+        "A_log": Param(a_init, ("mlp", "state")),
+        "D": Param(jnp.ones((di,), jnp.float32), ("mlp",)),
+        "out_proj": dense_init(ks[4], (di, d), ("mlp", "embed"), dtp),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv: x [B,S,di], w [K,di]."""
+    K = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + x.shape[1], :] * w[i] for i in range(K))
+    return out + b
+
+
+def _ssm_inputs(p, x, cfg: ArchConfig):
+    di = x.shape[-1]
+    st = cfg.ssm_state
+    dt_rank = p["dt_proj"].shape[0]
+    bcd = x @ p["x_proj"].astype(x.dtype)
+    dt = jax.nn.softplus(
+        bcd[..., :dt_rank].astype(jnp.float32) @ p["dt_proj"].astype(jnp.float32)
+        + p["dt_bias"])                                        # [B,S,di]
+    Bm = bcd[..., dt_rank:dt_rank + st].astype(jnp.float32)    # [B,S,st]
+    Cm = bcd[..., dt_rank + st:].astype(jnp.float32)           # [B,S,st]
+    A = -jnp.exp(p["A_log"])                                   # [di,st]
+    decay = jnp.exp(dt[..., None] * A)                         # [B,S,di,st]
+    drive = (dt * x.astype(jnp.float32))[..., None] * Bm[..., None, :]
+    return decay, drive, Cm, A
+
+
+SSM_CHUNK = 1024  # sequence chunk: bounds the [B,C,di,state] intermediates
+
+
+def ssm_scan(p, xz, cfg: ArchConfig):
+    """Train/prefill selective scan, *sequence-chunked*: a sequential
+    lax.scan over chunks carries the [B,di,state] SSM state; within a chunk
+    the recurrence runs as an associative scan.  This bounds the live
+    intermediates to one chunk (naive whole-sequence associative scan
+    materialises [B,S,di,state] — terabytes at 32k prefill).
+    xz [B,S,2*di]."""
+    di = xz.shape[-1] // 2
+    B, S, _ = xz.shape
+    xm, z = xz[..., :di], xz[..., di:]
+    xm = jax.nn.silu(_causal_conv(xm, p["conv_w"].astype(xm.dtype),
+                                  p["conv_b"].astype(xm.dtype)))
+
+    C = min(SSM_CHUNK, S)
+    assert S % C == 0, (S, C)
+    nc = S // C
+    xm_c = xm.reshape(B, nc, C, di).swapaxes(0, 1)      # [nc,B,C,di]
+
+    def combine(a, b):
+        (da, ha), (db, hb) = a, b
+        return da * db, hb + db * ha
+
+    def chunk_step(h0, xc):
+        decay, drive, Cm, _ = _ssm_inputs(p, xc, cfg)   # [B,C,di,st]
+        # fold carried state into the first step's drive
+        drive = drive.at[:, 0].add(decay[:, 0] * h0)
+        dcum, h = jax.lax.associative_scan(combine, (decay, drive), axis=1)
+        y = (h * Cm[:, :, None, :]).sum(-1) \
+            + p["D"] * xc.astype(jnp.float32)           # [B,C,di]
+        return h[:, -1], y
+
+    h0 = jnp.zeros((B, di, cfg.ssm_state), jnp.float32)
+    _, ys = jax.lax.scan(chunk_step, h0, xm_c)
+    y = ys.swapaxes(0, 1).reshape(B, S, di)
+    out = (y.astype(xz.dtype) * jax.nn.silu(z)) @ p["out_proj"].astype(xz.dtype)
+    return out
+
+
+def ssm_step(p, xz, state, cfg: ArchConfig):
+    """Single decode step.  xz [B,1,2*di]; state dict:
+        h    [B,di,st]   SSM state
+        conv [B,K-1,di]  causal-conv lookback
+    """
+    di = xz.shape[-1] // 2
+    xm, z = xz[..., :di], xz[..., di:]
+    K = cfg.ssm_conv
+    hist = jnp.concatenate([state["conv"], xm], axis=1)        # [B,K,di]
+    w = p["conv_w"].astype(xm.dtype)
+    xc = (hist * w[None, :, :]).sum(axis=1, keepdims=True) + p["conv_b"].astype(xm.dtype)
+    xc = jax.nn.silu(xc)
+    decay, drive, Cm, _ = _ssm_inputs(p, xc, cfg)              # [B,1,di,st]
+    h = state["h"] * decay[:, 0] + drive[:, 0]                 # [B,di,st]
+    y = (h * Cm[:, 0, None, :]).sum(-1) + p["D"] * xc[:, 0].astype(jnp.float32)
+    out = (y[:, None].astype(xz.dtype) * jax.nn.silu(z)) \
+        @ p["out_proj"].astype(xz.dtype)
+    return out, {"h": h, "conv": hist[:, 1:]}
+
+
+def ssm_state_init(cfg: ArchConfig, batch: int) -> dict:
+    di = cfg.d_model
+    return {
+        "h": jnp.zeros((batch, di, cfg.ssm_state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, di), jnp.dtype(cfg.dtype)),
+    }

@@ -1,0 +1,230 @@
+"""xLSTM blocks [arXiv:2405.04517]: mLSTM (matrix memory, parallelisable)
+and sLSTM (scalar memory, sequential) with exponential gating.
+
+Attention-free: decode state is O(1) per layer (DESIGN.md §4 notes the
+iRT/iRC inapplicability to decode-state paging for this family; the tiered
+parameter store still applies).
+
+Train/prefill:
+  mLSTM uses the stabilised parallel (quadratic masked) form.
+  sLSTM has a true recurrent dependency (h_{t-1} feeds the gates) -> lax.scan.
+Decode: single-step recurrent updates for both.
+
+Every layer carries BOTH branch parameter sets plus a static per-layer flag,
+so the layer stack stays a homogeneous pytree for scan-over-layers
+(transformer.py); ``lax.cond`` executes only the selected branch.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+
+from .layers import Param, dense_init
+
+NEG_INF = -1e30
+
+
+def xlstm_init(key, cfg: ArchConfig) -> dict:
+    d, H = cfg.d_model, cfg.n_heads
+    hd = d // H
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 8)
+    return {
+        # mLSTM branch
+        "m_qkv": dense_init(ks[0], (d, 3, H, hd), ("embed", "qkv", "heads", None), dt),
+        "m_if": dense_init(ks[1], (d, 2, H), ("embed", None, "heads"),
+                           jnp.float32, scale=0.02),
+        "m_if_b": Param(jnp.tile(jnp.array([0.0, 3.0], jnp.float32)[:, None],
+                                 (1, H)), (None, "heads")),
+        "m_og": dense_init(ks[2], (d, d), ("embed", "mlp"), dt),
+        "m_out": dense_init(ks[3], (d, d), ("mlp", "embed"), dt),
+        # sLSTM branch: gates (z, i, f, o) = W x + R h_{t-1} + b
+        "s_w": dense_init(ks[4], (d, 4, H, hd), ("embed", "qkv", "heads", None), dt),
+        "s_r": dense_init(ks[5], (H, hd, 4, hd), ("heads", None, "qkv", None),
+                          jnp.float32, scale=0.02),
+        "s_b": Param(jnp.tile(jnp.array([0.0, 0.0, 3.0, 0.0], jnp.float32)
+                              [:, None, None], (1, H, hd)),
+                     ("qkv", "heads", None)),
+        "s_out": dense_init(ks[6], (d, d), ("mlp", "embed"), dt),
+    }
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def _m_gates(p, x):
+    if_pre = jnp.einsum("bsd,dgh->bsgh", x.astype(jnp.float32), p["m_if"]) \
+        + p["m_if_b"]
+    return if_pre[:, :, 0], if_pre[:, :, 1]      # i_pre, f_pre: [B,S,H]
+
+
+MLSTM_CHUNK = 1024  # bounds the [B,H,C,C] intra-chunk decay matrices
+
+
+def mlstm_parallel(p, x):
+    """Chunkwise stabilised parallel form.  x [B,S,d] -> [B,S,d].
+
+    A sequential scan over sequence chunks carries the stabilised matrix
+    memory (C~, n~, m) — true values are (C~*e^m, n~*e^m) — while the
+    intra-chunk part uses the quadratic masked form.  Equivalent to the
+    xLSTM paper's parallel form but with O(S*C) instead of O(S^2) live
+    memory (needed at 32k/500k contexts)."""
+    B, S, d = x.shape
+    qkv = jnp.einsum("bsd,dqhk->qbshk", x, p["m_qkv"].astype(x.dtype))
+    q, k, v = qkv[0], qkv[1], qkv[2]             # [B,S,H,hd]
+    H, hd = q.shape[2], q.shape[3]
+    i_pre, f_pre = _m_gates(p, x)                # [B,S,H]
+    logf = jax.nn.log_sigmoid(f_pre)
+
+    C = min(MLSTM_CHUNK, S)
+    assert S % C == 0
+    nc = S // C
+
+    def resh(t, extra=()):                       # [B,S,...] -> [nc,B,C,...]
+        return t.reshape((B, nc, C) + t.shape[2:]).swapaxes(0, 1)
+
+    qs, ks, vs = resh(q), resh(k), resh(v)
+    is_, fs_ = resh(i_pre), resh(logf)
+    scale = 1.0 / np.sqrt(hd)
+
+    def chunk(carry, xs):
+        Cm, n, m = carry                          # [B,H,hd,hd],[B,H,hd],[B,H]
+        qc, kc, vc, ic, fc = xs                   # [B,C,H,*]
+        b = jnp.cumsum(fc, axis=1)                # [B,C,H] within-chunk
+        bT = b.transpose(0, 2, 1)                 # [B,H,C]
+        iT = ic.transpose(0, 2, 1)
+        # intra-chunk log weights: D[s,t] = b_s - b_t + i_t  (t <= s)
+        D = bT[:, :, :, None] - bT[:, :, None, :] + iT[:, :, None, :]
+        tril = jnp.tril(jnp.ones((C, C), jnp.bool_))
+        D = jnp.where(tril, D, NEG_INF)
+        m_intra = jnp.max(D, axis=-1)             # [B,H,C]
+        m_inter = m[:, :, None] + bT              # carried state decayed
+        m_s = jnp.maximum(m_intra, m_inter)
+        logits = jnp.einsum("bshk,bthk->bhst", qc, kc).astype(jnp.float32) * scale
+        W = logits * jnp.exp(D - m_s[..., None])
+        inter_w = jnp.exp(m_inter - m_s)          # [B,H,C]
+        qf = qc.transpose(0, 2, 1, 3).astype(jnp.float32) * scale  # [B,H,C,hd]
+        num = jnp.einsum("bhst,bthk->bhsk", W, vc.astype(jnp.float32)) \
+            + inter_w[..., None] * jnp.einsum("bhsk,bhkv->bhsv", qf, Cm)
+        den = W.sum(-1) + inter_w * jnp.einsum("bhsk,bhk->bhs", qf, n)
+        den = jnp.maximum(jnp.abs(den), jnp.exp(-m_s))
+        h = (num / den[..., None]).transpose(0, 2, 1, 3)  # [B,C,H,hd]
+        # carry update to the end of the chunk
+        btot = bT[:, :, -1]                       # [B,H]
+        g = btot[:, :, None] - bT + iT            # log gain of (k_t v_t)
+        m_new = jnp.maximum(m + btot, jnp.max(g, axis=-1))
+        kv = jnp.einsum("bht,bthk,bthv->bhkv",
+                        jnp.exp(g - m_new[:, :, None]),
+                        kc.astype(jnp.float32), vc.astype(jnp.float32))
+        ksum = jnp.einsum("bht,bthk->bhk", jnp.exp(g - m_new[:, :, None]),
+                          kc.astype(jnp.float32))
+        decay_old = jnp.exp(m + btot - m_new)
+        Cm = Cm * decay_old[..., None, None] + kv
+        n = n * decay_old[..., None] + ksum
+        return (Cm, n, m_new), h
+
+    Cm0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    n0 = jnp.zeros((B, H, hd), jnp.float32)
+    m0 = jnp.full((B, H), -1e30, jnp.float32)
+    _, hs = jax.lax.scan(chunk, (Cm0, n0, m0), (qs, ks, vs, is_, fs_))
+    h = hs.swapaxes(0, 1).reshape(B, S, d).astype(x.dtype)
+    og = jax.nn.sigmoid(x @ p["m_og"].astype(x.dtype))
+    out = (h * og) @ p["m_out"].astype(x.dtype)
+    return out
+
+
+def mlstm_step(p, x, state):
+    """x [B,1,d]; state: C [B,H,hd,hd], n [B,H,hd], m [B,H]."""
+    B, _, d = x.shape
+    qkv = jnp.einsum("bsd,dqhk->qbshk", x, p["m_qkv"].astype(x.dtype))
+    q, k, v = (t[:, 0] for t in (qkv[0], qkv[1], qkv[2]))    # [B,H,hd]
+    hd = q.shape[-1]
+    i_pre, f_pre = _m_gates(p, x)
+    i_pre, f_pre = i_pre[:, 0], f_pre[:, 0]                  # [B,H]
+    logf = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(logf + state["m"], i_pre)
+    a = jnp.exp(logf + state["m"] - m_new)[..., None]
+    bgate = jnp.exp(i_pre - m_new)[..., None]
+    kf, vf, qf = (t.astype(jnp.float32) for t in (k, v, q))
+    C = state["C"] * a[..., None] + bgate[..., None] * kf[..., :, None] * vf[..., None, :]
+    n = state["n"] * a + bgate * kf
+    num = jnp.einsum("bhkv,bhk->bhv", C, qf / jnp.sqrt(hd))
+    denom = jnp.maximum(jnp.abs((n * qf / jnp.sqrt(hd)).sum(-1)),
+                        jnp.exp(-m_new))                     # [B,H]
+    h = (num / denom[..., None]).astype(x.dtype)
+    og = jax.nn.sigmoid(x[:, 0] @ p["m_og"].astype(x.dtype))
+    out = ((h.reshape(B, d) * og) @ p["m_out"].astype(x.dtype))[:, None]
+    return out, {"C": C, "n": n, "m": m_new}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def _s_cell(p, gates_x, st):
+    """One sLSTM step.  gates_x [B,4,H,hd] (W x + b part);
+    st: h, c, n [B,H,hd], m [B,H,hd]."""
+    rec = jnp.einsum("bhk,hkgl->bghl", st["h"], p["s_r"])
+    z_pre, i_pre, f_pre, o_pre = [gates_x[:, g].astype(jnp.float32) + rec[:, g]
+                                  for g in range(4)]
+    logf = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(logf + st["m"], i_pre)
+    a = jnp.exp(logf + st["m"] - m_new)
+    bg = jnp.exp(i_pre - m_new)
+    c = a * st["c"] + bg * jnp.tanh(z_pre)
+    n = a * st["n"] + bg
+    h = jax.nn.sigmoid(o_pre) * c / jnp.maximum(n, 1e-6)
+    return {"h": h, "c": c, "n": n, "m": m_new}
+
+
+def slstm_scan(p, x):
+    """Sequential sLSTM over the sequence.  x [B,S,d] -> [B,S,d]."""
+    B, S, d = x.shape
+    H, hd = p["s_r"].shape[0], p["s_r"].shape[1]
+    gates = jnp.einsum("bsd,dghk->sbghk", x, p["s_w"].astype(x.dtype)) \
+        + p["s_b"].astype(x.dtype)[None, None]
+
+    st0 = slstm_state_init(B, H, hd)
+
+    def step(st, g):
+        st = _s_cell(p, g, st)
+        return st, st["h"]
+
+    _, hs = jax.lax.scan(step, st0, gates)       # [S,B,H,hd]
+    h = hs.transpose(1, 0, 2, 3).reshape(B, S, d).astype(x.dtype)
+    return h @ p["s_out"].astype(x.dtype)
+
+
+def slstm_step(p, x, st):
+    """x [B,1,d]."""
+    B, _, d = x.shape
+    gates = jnp.einsum("bsd,dghk->bsghk", x, p["s_w"].astype(x.dtype))[:, 0] \
+        + p["s_b"].astype(x.dtype)[None]
+    st = _s_cell(p, gates, st)
+    out = (st["h"].reshape(B, d).astype(x.dtype) @ p["s_out"].astype(x.dtype))
+    return out[:, None], st
+
+
+# ---------------------------------------------------------------------------
+# state init (both branches carried per layer for scan homogeneity)
+# ---------------------------------------------------------------------------
+
+def slstm_state_init(batch: int, H: int, hd: int) -> dict:
+    z = lambda *s: jnp.zeros(s, jnp.float32)  # noqa: E731
+    return {"h": z(batch, H, hd), "c": z(batch, H, hd),
+            "n": z(batch, H, hd), "m": z(batch, H, hd)}
+
+
+def xlstm_state_init(cfg: ArchConfig, batch: int) -> dict:
+    H = cfg.n_heads
+    hd = cfg.d_model // H
+    z = lambda *s: jnp.zeros(s, jnp.float32)  # noqa: E731
+    return {
+        "mC": z(batch, H, hd, hd), "mn": z(batch, H, hd), "mm": z(batch, H),
+        "s": slstm_state_init(batch, H, hd),
+    }

@@ -1,0 +1,121 @@
+"""Sharded serving steps: prefill (prompt -> KV cache) and decode
+(one token against the cache).  Used by the serving engine, the examples
+and the multi-pod dry-run.
+
+Decode-state sharding: KV caches shard batch over the DP axes and the
+*sequence* dimension over 'model' (kv_heads are often < model-axis size:
+qwen2-72b has kv=8 on a 16-way axis, so sequence sharding wins — the
+recorded hillclimb explores the alternatives).  Recurrent states (mamba /
+xLSTM) shard batch only; they are O(1) per sequence.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import (abstract_decode_state, abstract_params_and_axes,
+                          decode_step, forward, prefill)
+from repro.sharding.specs import spec_for, tree_shardings
+
+
+def _cache_axes(path: str, ndim: int) -> tuple:
+    leaf = path.split("/")[-1]
+    if leaf in ("k", "v"):
+        if ndim == 6:     # vlm: [ns, inner, B, S, KV, hd]
+            return ("layers", None, "batch", "seq", None, None)
+        return ("layers", "batch", "seq", None, None)
+    if leaf in ("ik", "iv"):                    # image KV: [ns,B,T,KV,hd]
+        return ("layers", "batch", None, None, None)
+    # recurrent states: [L, B, ...]
+    return ("layers", "batch") + (None,) * (ndim - 2)
+
+
+def decode_state_shardings(cfg: ArchConfig, state_abs, mesh):
+    """NamedSharding tree matching a DecodeState."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(state_abs)
+    out = []
+    for path, leaf in flat:
+        name = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        if name.endswith("pos") or leaf.ndim == 0:
+            axes = ()
+        else:
+            axes = _cache_axes(name, leaf.ndim)
+        out.append(NamedSharding(
+            mesh, spec_for(axes, mesh=mesh, shape=tuple(leaf.shape))))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def batch_shardings(batch_specs: dict, mesh):
+    out = {}
+    for k, v in batch_specs.items():
+        axes = ("batch",) + (None,) * (len(v.shape) - 1)
+        out[k] = NamedSharding(mesh, spec_for(axes, mesh=mesh,
+                                              shape=tuple(v.shape)))
+    return out
+
+
+def make_decode_fn(cfg: ArchConfig):
+    def fn(params, state, tokens):
+        return decode_step(cfg, params, state, tokens)
+    return fn
+
+
+def make_prefill_fn(cfg: ArchConfig, shape: ShapeConfig):
+    if cfg.is_encoder:
+        def fn(params, batch):          # encode: logits over frames
+            logits, aux, _ = forward(cfg, params, batch)
+            return logits
+        return fn
+
+    def fn(params, batch):
+        logits, state = prefill(cfg, params, batch, max_len=shape.seq_len)
+        return logits[:, -1], state
+    return fn
+
+
+def jit_decode(cfg: ArchConfig, shape: ShapeConfig, mesh, donate=True):
+    """Returns (jitted fn, (params_abs, state_abs, tokens_abs))."""
+    params_abs, axes = abstract_params_and_axes(cfg)
+    p_sh = tree_shardings(axes, mesh, params_abs)
+    state_abs = abstract_decode_state(cfg, shape)
+    s_sh = decode_state_shardings(cfg, state_abs, mesh)
+    t_abs = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
+    t_sh = NamedSharding(mesh, spec_for(("batch",), mesh=mesh,
+                                        shape=t_abs.shape))
+    logits_sh = NamedSharding(
+        mesh, spec_for(("batch", "vocab"), mesh=mesh,
+                       shape=(shape.global_batch, cfg.vocab)))
+    kwargs = dict(in_shardings=(p_sh, s_sh, t_sh),
+                  out_shardings=(logits_sh, s_sh))
+    if donate:
+        kwargs["donate_argnums"] = (1,)
+    return jax.jit(make_decode_fn(cfg), **kwargs), (params_abs, state_abs,
+                                                    t_abs)
+
+
+def jit_prefill(cfg: ArchConfig, shape: ShapeConfig, mesh):
+    from repro.models import input_specs
+    params_abs, axes = abstract_params_and_axes(cfg)
+    p_sh = tree_shardings(axes, mesh, params_abs)
+    specs = input_specs(cfg, shape)
+    b_sh = batch_shardings(specs, mesh)
+    if cfg.is_encoder:
+        out_sh = NamedSharding(
+            mesh, spec_for(("batch", None, "vocab"), mesh=mesh,
+                           shape=(shape.global_batch, shape.seq_len,
+                                  cfg.vocab)))
+    else:
+        state_abs = jax.eval_shape(
+            lambda p, b: make_prefill_fn(cfg, shape)(p, b)[1],
+            params_abs, specs)
+        s_sh = decode_state_shardings(cfg, state_abs, mesh)
+        out_sh = (NamedSharding(
+            mesh, spec_for(("batch", "vocab"), mesh=mesh,
+                           shape=(shape.global_batch, cfg.vocab))), s_sh)
+    return jax.jit(make_prefill_fn(cfg, shape),
+                   in_shardings=(p_sh, b_sh),
+                   out_shardings=out_sh), (params_abs, specs)

@@ -1,0 +1,150 @@
+"""Logical-axis sharding rules (MaxText-style) for pjit distribution.
+
+Model code annotates arrays with *logical* axis names via
+``logical_constraint(x, ("batch", "seq", "embed"))``.  The launcher installs a
+mesh + rule set with ``use_mesh``; outside that context the annotations are
+no-ops, so model code runs unmodified in CPU unit tests.
+
+Parallelism mapping (DESIGN.md §5):
+  batch    -> ("pod", "data")   pure DP across pods and the data axis
+  embed    -> "data"            FSDP/ZeRO-3: params sharded over data, XLA
+                                 SPMD inserts the per-layer all-gathers
+  heads/mlp/vocab/kv -> "model" tensor parallelism
+  seq      -> "model"           sequence parallelism for the residual stream
+  expert   -> "model"           expert parallelism (MoE)
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> mesh axes; order matters for multi-axis assignments
+DEFAULT_RULES: dict[str, tuple[str, ...] | str | None] = {
+    "batch": ("pod", "data"),
+    "seq": "model",
+    "embed": "data",          # FSDP axis for parameters
+    "embed_act": None,        # activations keep embed replicated
+    "heads": "model",
+    "kv_heads": "model",
+    "mlp": "model",
+    "vocab": "model",
+    "expert": "model",
+    "layers": None,
+    "qkv": None,
+    "conv": None,
+    "state": None,
+    "capacity": None,
+    "image": None,
+}
+
+_ctx = threading.local()
+
+
+def _state():
+    if not hasattr(_ctx, "mesh"):
+        _ctx.mesh, _ctx.rules = None, DEFAULT_RULES
+    return _ctx
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh, rules: dict | None = None):
+    """Install a mesh so logical_constraint/param shardings become active."""
+    st = _state()
+    prev = (st.mesh, st.rules)
+    st.mesh = mesh
+    st.rules = dict(DEFAULT_RULES, **(rules or {}))
+    try:
+        with mesh:
+            yield mesh
+    finally:
+        st.mesh, st.rules = prev
+
+
+def current_mesh() -> Mesh | None:
+    return _state().mesh
+
+
+def spec_for(logical_axes: tuple[str | None, ...],
+             rules: dict | None = None,
+             mesh: Mesh | None = None,
+             shape: tuple[int, ...] | None = None) -> P:
+    """Translate logical axis names into a PartitionSpec under ``rules``.
+
+    Divisibility-aware: mesh axes that don't exist (e.g. 'pod' on the
+    single-pod mesh) or whose size doesn't divide the array dimension
+    (kv_heads=8 on a 16-way 'model' axis, hymba's 25 heads, granite's
+    40 experts / 49155 vocab) are dropped — the dimension stays replicated
+    rather than failing to lower.  Every mesh axis is used at most once."""
+    st = _state()
+    rules = rules or st.rules
+    mesh = mesh or st.mesh
+    axis_names = set(mesh.axis_names) if mesh is not None else set()
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape)) if mesh else {}
+    out, used = [], set()
+    for i, ax in enumerate(logical_axes):
+        assign = rules.get(ax) if ax is not None else None
+        if assign is None:
+            out.append(None)
+            continue
+        if isinstance(assign, str):
+            assign = (assign,)
+        dim = shape[i] if shape is not None and i < len(shape) else None
+        picked = []
+        prod = 1
+        for a in assign:
+            if a not in axis_names or a in used:
+                continue
+            if dim is not None and dim % (prod * sizes[a]) != 0:
+                continue
+            picked.append(a)
+            prod *= sizes[a]
+        used.update(picked)
+        if len(picked) == 0:
+            out.append(None)
+        elif len(picked) == 1:
+            out.append(picked[0])
+        else:
+            out.append(tuple(picked))
+    return P(*out)
+
+
+def logical_constraint(x, logical_axes: tuple[str | None, ...]):
+    """with_sharding_constraint by logical axes; no-op without a mesh."""
+    st = _state()
+    if st.mesh is None:
+        return x
+    spec = spec_for(logical_axes, shape=tuple(x.shape))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(st.mesh, spec))
+
+
+def named_sharding(logical_axes: tuple[str | None, ...],
+                   shape: tuple[int, ...] | None = None
+                   ) -> NamedSharding | None:
+    st = _state()
+    if st.mesh is None:
+        return None
+    return NamedSharding(st.mesh, spec_for(logical_axes, shape=shape))
+
+
+def tree_shardings(axes_tree, mesh: Mesh, abstract_tree=None,
+                   rules: dict | None = None):
+    """Map a pytree of logical-axis tuples to NamedShardings.  When
+    ``abstract_tree`` (same structure, ShapeDtypeStruct/array leaves) is
+    given, shardings are divisibility-checked against each leaf shape."""
+    is_axes = lambda t: isinstance(t, tuple)  # noqa: E731
+    if abstract_tree is None:
+        return jax.tree.map(
+            lambda axes: NamedSharding(mesh, spec_for(tuple(axes), rules,
+                                                      mesh)),
+            axes_tree, is_leaf=is_axes)
+    flat_axes, treedef = jax.tree_util.tree_flatten(
+        axes_tree, is_leaf=is_axes)
+    flat_abs = treedef.flatten_up_to(abstract_tree)
+    out = [NamedSharding(mesh, spec_for(tuple(a), rules, mesh,
+                                        tuple(l.shape)))
+           for a, l in zip(flat_axes, flat_abs)]
+    return jax.tree_util.tree_unflatten(treedef, out)

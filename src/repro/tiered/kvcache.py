@@ -1,0 +1,404 @@
+"""TieredKVCache: the paper's metadata scheme as a first-class serving
+feature (DESIGN.md §2 Layer B).
+
+Two pools of KV pages per layer:
+  slow pool — every logical page's *home* (host DRAM / CXL at deployment;
+              device memory in this container, see the deployment note in
+              DESIGN.md);
+  fast pool — small HBM pool holding hot pages + the iRT metadata region.
+
+Exactly the paper's structures, at page granularity:
+
+  iRT (Section 3.2)   l1_bits: one bit per leaf ("allocated?"),
+                      leaf_table [n_leaf * E]: logical page -> fast slot,
+                      entries exist ONLY for migrated (non-identity) pages;
+                      a miss at any level defaults to the slow home.
+  saved-space caching (Section 3.3)
+                      the fast pool's last ``meta_slots`` slots host leaf
+                      blocks 1:1; while leaf i is unallocated its slot backs
+                      a data page; allocating the leaf force-evicts it
+                      (metadata priority).
+  iRC (Section 3.4)   NonIdCache (tag -> slot) + IdCache (sector bit
+                      vectors) probed before walking the iRT; entries
+                      update in place on migration.
+
+The translated page table feeds the Pallas paged-attention kernel (the
+pools are addressed as one *unified* index space: slot < fast_slots -> fast
+pool, else slow home) — on real hardware the two pools live in different
+memory kinds and the gather becomes a DMA, same metadata either way.
+
+All state is a pure pytree; every op is jit-able and returns a new state.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.irt_lookup.ref import irt_lookup_ref
+
+E = 64          # iRT entries per leaf block (Section 3.2)
+INVALID = -1
+
+
+@dataclasses.dataclass(frozen=True)
+class TieredConfig:
+    n_seqs: int
+    max_pages_per_seq: int          # logical pages per sequence
+    page_tokens: int
+    n_kv_heads: int
+    head_dim: int
+    fast_data_slots: int            # HBM data-area pages
+    migrate_threshold: int = 2
+    # iRC geometry (scaled Table 1)
+    nid_sets: int = 32
+    nid_ways: int = 6
+    id_sets: int = 8
+    id_ways: int = 16
+    dtype: str = "bfloat16"
+
+    @property
+    def n_logical(self) -> int:
+        return self.n_seqs * self.max_pages_per_seq
+
+    @property
+    def n_leaf(self) -> int:
+        return -(-self.n_logical // E)
+
+    @property
+    def meta_slots(self) -> int:
+        """Reserved metadata region, lendable while leaves are unallocated
+        (one slot hosts one leaf block)."""
+        return self.n_leaf
+
+    @property
+    def fast_slots(self) -> int:
+        return self.fast_data_slots + self.meta_slots
+
+    @property
+    def n_words(self) -> int:
+        return -(-self.n_leaf // 32)
+
+
+class TieredState(NamedTuple):
+    fast_k: jnp.ndarray          # [fast_slots, KV, page, hd]
+    fast_v: jnp.ndarray
+    slow_k: jnp.ndarray          # [n_logical, KV, page, hd] (homes)
+    slow_v: jnp.ndarray
+    l1_bits: jnp.ndarray         # [n_words] int32
+    leaf_table: jnp.ndarray      # [n_leaf*E] int32 (page -> fast slot)
+    leaf_cnt: jnp.ndarray        # [n_leaf] int32
+    slot_owner: jnp.ndarray      # [fast_slots] int32 (inverse mapping)
+    touch: jnp.ndarray           # [n_logical] int32 hotness
+    fifo_ptr: jnp.ndarray        # scalar
+    # iRC
+    nid_tag: jnp.ndarray         # [nid_sets, nid_ways]
+    nid_val: jnp.ndarray
+    nid_fifo: jnp.ndarray
+    id_tag: jnp.ndarray          # [id_sets, id_ways]
+    id_bits: jnp.ndarray         # uint32 sector vectors
+    id_fifo: jnp.ndarray
+    # counters
+    lookups: jnp.ndarray
+    irc_hits: jnp.ndarray
+    irc_id_hits: jnp.ndarray
+    migrations: jnp.ndarray
+    forced_evict: jnp.ndarray
+
+
+def init_state(cfg: TieredConfig) -> TieredState:
+    dt = jnp.dtype(cfg.dtype)
+    KV, P, hd = cfg.n_kv_heads, cfg.page_tokens, cfg.head_dim
+    z = jnp.zeros
+    return TieredState(
+        fast_k=z((cfg.fast_slots, KV, P, hd), dt),
+        fast_v=z((cfg.fast_slots, KV, P, hd), dt),
+        slow_k=z((cfg.n_logical, KV, P, hd), dt),
+        slow_v=z((cfg.n_logical, KV, P, hd), dt),
+        l1_bits=z((cfg.n_words,), jnp.int32),
+        leaf_table=jnp.full((cfg.n_leaf * E,), INVALID, jnp.int32),
+        leaf_cnt=z((cfg.n_leaf,), jnp.int32),
+        slot_owner=jnp.full((cfg.fast_slots,), INVALID, jnp.int32),
+        touch=z((cfg.n_logical,), jnp.int32),
+        fifo_ptr=z((), jnp.int32),
+        nid_tag=jnp.full((cfg.nid_sets, cfg.nid_ways), INVALID, jnp.int32),
+        nid_val=jnp.full((cfg.nid_sets, cfg.nid_ways), INVALID, jnp.int32),
+        nid_fifo=z((cfg.nid_sets,), jnp.int32),
+        id_tag=jnp.full((cfg.id_sets, cfg.id_ways), INVALID, jnp.int32),
+        id_bits=z((cfg.id_sets, cfg.id_ways), jnp.uint32),
+        id_fifo=z((cfg.id_sets,), jnp.int32),
+        lookups=z((), jnp.int32), irc_hits=z((), jnp.int32),
+        irc_id_hits=z((), jnp.int32), migrations=z((), jnp.int32),
+        forced_evict=z((), jnp.int32),
+    )
+
+
+def logical_page(cfg: TieredConfig, seq: jnp.ndarray, j: jnp.ndarray):
+    return seq * cfg.max_pages_per_seq + j
+
+
+# ---------------------------------------------------------------------------
+# iRC probe / fill (vectorised over a batch of page ids)
+# ---------------------------------------------------------------------------
+
+_HASH = 2654435761
+
+
+def _id_index(cfg, sb):
+    h = (sb.astype(jnp.uint32) * jnp.uint32(_HASH)) >> jnp.uint32(16)
+    return (h % jnp.uint32(cfg.id_sets)).astype(jnp.int32)
+
+
+def _irc_probe(cfg: TieredConfig, st: TieredState, ids):
+    """ids [N] -> (hit [N], val [N], id_hit [N])."""
+    s_n = ids % cfg.nid_sets
+    n_match = st.nid_tag[s_n] == ids[:, None]
+    nid_hit = n_match.any(-1)
+    nid_val = jnp.where(n_match, st.nid_val[s_n], 0).sum(-1)
+    sb = ids // 32
+    bit = (ids % 32).astype(jnp.uint32)
+    s_i = _id_index(cfg, sb)
+    i_match = st.id_tag[s_i] == sb[:, None]
+    line = jnp.where(i_match, st.id_bits[s_i], jnp.uint32(0)).sum(-1)
+    id_hit = i_match.any(-1) & (((line >> bit) & jnp.uint32(1)) == 1)
+    return nid_hit | id_hit, jnp.where(nid_hit, nid_val, INVALID), id_hit
+
+
+def _irc_fill(cfg: TieredConfig, st: TieredState, ids, dev, miss):
+    """Fill walked entries (batch scatter; colliding fills last-write-win,
+    an acceptable relaxation of per-access FIFO at batch granularity)."""
+    is_id = dev == INVALID
+    # NonIdCache
+    en = miss & ~is_id
+    s_n = ids % cfg.nid_sets
+    w_n = st.nid_fifo[s_n] % cfg.nid_ways
+    idx = jnp.where(en, s_n, cfg.nid_sets)        # OOB -> dropped
+    st = st._replace(
+        nid_tag=st.nid_tag.at[idx, w_n].set(ids, mode="drop"),
+        nid_val=st.nid_val.at[idx, w_n].set(dev, mode="drop"),
+        nid_fifo=st.nid_fifo.at[idx].add(1, mode="drop"))
+    # IdCache: assemble sector vectors from the leaf table ground truth
+    en_i = miss & is_id
+    sb = ids // 32
+    base = sb * 32
+    offs = base[:, None] + jnp.arange(32)[None, :]
+    offs = jnp.clip(offs, 0, st.leaf_table.shape[0] - 1)
+    sector_id = ((st.leaf_table[offs] == INVALID)
+                 .astype(jnp.uint32) << jnp.arange(32, dtype=jnp.uint32)).sum(-1)
+    s_i = _id_index(cfg, sb)
+    present = (st.id_tag[s_i] == sb[:, None]).any(-1)
+    w_i = jnp.where(present,
+                    jnp.argmax(st.id_tag[s_i] == sb[:, None], axis=-1),
+                    st.id_fifo[s_i] % cfg.id_ways)
+    idx = jnp.where(en_i, s_i, cfg.id_sets)       # OOB -> dropped
+    idx_new = jnp.where(en_i & ~present, s_i, cfg.id_sets)
+    st = st._replace(
+        id_tag=st.id_tag.at[idx, w_i].set(sb, mode="drop"),
+        id_bits=st.id_bits.at[idx, w_i].set(sector_id, mode="drop"),
+        id_fifo=st.id_fifo.at[idx_new].add(1, mode="drop"))
+    return st
+
+
+def _irc_update(cfg: TieredConfig, st: TieredState, ids, becomes_identity,
+                enable):
+    """Entry-granular consistency on iRT updates (Section 3.4): kill the
+    NonIdCache line, update the IdCache bit in place."""
+    s_n = ids % cfg.nid_sets
+    kill = (st.nid_tag[s_n] == ids[:, None]) & enable[:, None]
+    idx = jnp.where(enable & kill.any(-1), s_n, cfg.nid_sets)
+    st = st._replace(nid_tag=st.nid_tag.at[idx].set(
+        jnp.where(kill, INVALID, st.nid_tag[s_n]), mode="drop"))
+    sb = ids // 32
+    bit = (ids % 32).astype(jnp.uint32)
+    s_i = _id_index(cfg, sb)
+    present = (st.id_tag[s_i] == sb[:, None]) & enable[:, None]
+    new_bit = becomes_identity.astype(jnp.uint32)
+    line = st.id_bits[s_i]
+    upd = (line & ~(jnp.uint32(1) << bit[:, None])) \
+        | (new_bit[:, None] << bit[:, None])
+    idx = jnp.where(enable & present.any(-1), s_i, cfg.id_sets)
+    st = st._replace(id_bits=st.id_bits.at[idx].set(
+        jnp.where(present, upd, line), mode="drop"))
+    return st
+
+
+# ---------------------------------------------------------------------------
+# lookup: logical page table -> device page table (the serving hot path)
+# ---------------------------------------------------------------------------
+
+def lookup(cfg: TieredConfig, st: TieredState, page_ids):
+    """page_ids [B, npages] logical -> (device_table [B, npages], state).
+
+    Device slots index the *unified* pool: < fast_slots -> fast pool,
+    otherwise fast_slots + home (slow pool).  iRC is probed first; misses
+    walk the iRT (both levels in parallel — kernels/irt_lookup)."""
+    B, NP = page_ids.shape
+    ids = page_ids.reshape(-1)
+    hit, val, id_hit = _irc_probe(cfg, st, ids)
+    home = cfg.fast_slots + ids
+    walked = irt_lookup_ref(ids, jnp.full_like(ids, INVALID),
+                            st.l1_bits, st.leaf_table)
+    dev_walk = jnp.where(walked == INVALID, home, walked)
+    dev_irc = jnp.where(id_hit, home, val)
+    dev = jnp.where(hit, dev_irc, dev_walk)
+    st = _irc_fill(cfg, st, ids, walked, ~hit)
+    st = st._replace(
+        lookups=st.lookups + ids.shape[0],
+        irc_hits=st.irc_hits + hit.sum(dtype=jnp.int32),
+        irc_id_hits=st.irc_id_hits + id_hit.sum(dtype=jnp.int32),
+        touch=st.touch.at[ids].add(1))
+    return dev.reshape(B, NP), st
+
+
+def unified_pools(st: TieredState):
+    """Concatenated (fast | slow) pools for the paged-attention gather.
+    On TPU the slow half is host memory and this concat is replaced by a
+    memory-kind-aware DMA (deployment note, DESIGN.md)."""
+    return (jnp.concatenate([st.fast_k, st.slow_k], axis=0),
+            jnp.concatenate([st.fast_v, st.slow_v], axis=0))
+
+
+# ---------------------------------------------------------------------------
+# append / migrate
+# ---------------------------------------------------------------------------
+
+def append_token(cfg: TieredConfig, st: TieredState, seq_ids, k, v, pos):
+    """Write one new token's KV for each sequence at position ``pos``.
+    k,v [B, KV, hd].  New tokens land in the page's home slot; if the page
+    is currently migrated (non-identity), the fast copy is updated instead."""
+    B = seq_ids.shape[0]
+    page = pos // cfg.page_tokens
+    off = pos % cfg.page_tokens
+    ids = logical_page(cfg, seq_ids, page)
+    entry = st.leaf_table[ids]
+    in_fast = entry != INVALID
+    # masked scatter via out-of-bounds drop: disabled lanes must not write
+    # anything (a clamped index + old-value write can clobber an enabled
+    # write to the same row — scatter order is undefined)
+    fast_idx = jnp.where(in_fast, entry, cfg.fast_slots)
+    slow_idx = jnp.where(in_fast, cfg.n_logical, ids)
+    dt = st.fast_k.dtype
+    st = st._replace(
+        fast_k=st.fast_k.at[fast_idx, :, off].set(k.astype(dt), mode="drop"),
+        fast_v=st.fast_v.at[fast_idx, :, off].set(v.astype(dt), mode="drop"),
+        slow_k=st.slow_k.at[slow_idx, :, off].set(k.astype(dt), mode="drop"),
+        slow_v=st.slow_v.at[slow_idx, :, off].set(v.astype(dt), mode="drop"))
+    return st
+
+
+def _leaf_hosting_slot(cfg: TieredConfig, leaf):
+    """Leaf i is hosted at fast slot fast_data_slots + i (fixed location,
+    Section 3.2)."""
+    return cfg.fast_data_slots + leaf
+
+
+def migrate_one(cfg: TieredConfig, st: TieredState, page_id, enable):
+    """Migrate one hot logical page into the fast pool (FIFO victim,
+    skipping allocated-metadata slots; metadata priority on leaf
+    allocation).  All updates masked by ``enable``."""
+    pid = jnp.where(enable, page_id, 0)
+    already = st.leaf_table[pid] != INVALID
+    en = enable & ~already
+
+    # --- FIFO victim skipping slots whose hosted leaf is allocated -------
+    K = cfg.fast_slots
+    order = (st.fifo_ptr + jnp.arange(K)) % K
+    hosted_leaf = order - cfg.fast_data_slots          # leaf id or <0
+    is_meta = order >= cfg.fast_data_slots
+    leaf_ok = jnp.where(
+        is_meta, st.leaf_cnt[jnp.clip(hosted_leaf, 0, cfg.n_leaf - 1)] == 0,
+        True)
+    # cannot evict the slot that will host this page's own leaf
+    my_leaf = pid // E
+    leaf_ok &= order != _leaf_hosting_slot(cfg, my_leaf)
+    pos = jnp.argmax(leaf_ok)
+    v = order[pos]
+    st = st._replace(fifo_ptr=jnp.where(en, (st.fifo_ptr + pos + 1) % K,
+                                        st.fifo_ptr))
+
+    # --- evict current occupant (slow-swap: copy back is a no-op, homes
+    # always hold the canonical bytes except the in-fast tail writes,
+    # which append_token keeps mirrored) --------------------------------
+    o = st.slot_owner[v]
+    has_o = en & (o != INVALID)
+    ov = jnp.where(has_o, o, 0)
+    st = st._replace(
+        leaf_table=st.leaf_table.at[ov].set(
+            jnp.where(has_o, INVALID, st.leaf_table[ov])),
+        leaf_cnt=st.leaf_cnt.at[jnp.where(has_o, ov // E, 0)].add(
+            jnp.where(has_o, -1, 0)),
+        slow_k=st.slow_k.at[ov].set(
+            jnp.where(has_o, st.fast_k[jnp.where(en, v, 0)], st.slow_k[ov])),
+        slow_v=st.slow_v.at[ov].set(
+            jnp.where(has_o, st.fast_v[jnp.where(en, v, 0)], st.slow_v[ov])))
+    st = _irc_update(cfg, st, ov[None], jnp.array([True]), has_o[None])
+
+    # --- install the page -------------------------------------------------
+    vv = jnp.where(en, v, 0)
+    st = st._replace(
+        fast_k=st.fast_k.at[vv].set(
+            jnp.where(en, st.slow_k[pid], st.fast_k[vv])),
+        fast_v=st.fast_v.at[vv].set(
+            jnp.where(en, st.slow_v[pid], st.fast_v[vv])),
+        slot_owner=st.slot_owner.at[vv].set(
+            jnp.where(en, pid, st.slot_owner[vv])),
+        leaf_table=st.leaf_table.at[jnp.where(en, pid, 0)].set(
+            jnp.where(en, v, st.leaf_table[pid])),
+        leaf_cnt=st.leaf_cnt.at[jnp.where(en, my_leaf, 0)].add(
+            jnp.where(en, 1, 0)),
+        migrations=st.migrations + jnp.where(en, 1, 0),
+        touch=st.touch.at[pid].set(jnp.where(en, 0, st.touch[pid])))
+    # l1 bit set
+    word, bit = my_leaf // 32, (my_leaf % 32).astype(jnp.uint32)
+    newbits = st.l1_bits.at[jnp.where(en, word, 0)].set(jnp.where(
+        en, (st.l1_bits[word].astype(jnp.uint32)
+             | (jnp.uint32(1) << bit)).astype(jnp.int32), st.l1_bits[word]))
+    st = st._replace(l1_bits=newbits)
+    st = _irc_update(cfg, st, pid[None], jnp.array([False]), en[None])
+
+    # --- metadata priority: evict data from the newly-allocated leaf's
+    # hosting slot (Section 3.3) -----------------------------------------
+    h = _leaf_hosting_slot(cfg, my_leaf)
+    was_free = st.leaf_cnt[my_leaf] == 1        # we allocated it just now
+    x = st.slot_owner[jnp.clip(h, 0, cfg.fast_slots - 1)]
+    need = en & was_free & (x != INVALID) & (h < cfg.fast_slots)
+    xv = jnp.where(need, x, 0)
+    hv = jnp.where(need, h, 0)
+    st = st._replace(
+        leaf_table=st.leaf_table.at[xv].set(
+            jnp.where(need, INVALID, st.leaf_table[xv])),
+        leaf_cnt=st.leaf_cnt.at[jnp.where(need, xv // E, 0)].add(
+            jnp.where(need, -1, 0)),
+        slow_k=st.slow_k.at[xv].set(
+            jnp.where(need, st.fast_k[hv], st.slow_k[xv])),
+        slow_v=st.slow_v.at[xv].set(
+            jnp.where(need, st.fast_v[hv], st.slow_v[xv])),
+        slot_owner=st.slot_owner.at[hv].set(
+            jnp.where(need, INVALID, st.slot_owner[hv])),
+        forced_evict=st.forced_evict + jnp.where(need, 1, 0))
+    st = _irc_update(cfg, st, xv[None], jnp.array([True]), need[None])
+    return st
+
+
+def migrate_hot(cfg: TieredConfig, st: TieredState, max_moves: int = 4):
+    """Off-critical-path migration: promote up to ``max_moves`` hottest
+    pages over the threshold (Figure 3's step 3)."""
+    hot = jnp.where(st.touch >= cfg.migrate_threshold,
+                    st.touch, -1)
+    top_vals, top_ids = jax.lax.top_k(hot, max_moves)
+
+    def body(st, args):
+        val, pid = args
+        return migrate_one(cfg, st, pid, val > 0), None
+
+    st, _ = jax.lax.scan(body, st, (top_vals, top_ids))
+    return st
+
+
+def metadata_pages(cfg: TieredConfig, st: TieredState) -> jnp.ndarray:
+    """Current metadata footprint in pages (allocated leaves), vs the
+    linear-table equivalent n_leaf (Figure 9 analogue for serving)."""
+    return (st.leaf_cnt > 0).sum()

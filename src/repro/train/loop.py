@@ -1,0 +1,219 @@
+"""Training loop: sharded train_step builder + fault-tolerant driver.
+
+``make_train_step`` assembles the pjit-able step:
+  loss (models.loss_fn, scan-over-layers + remat)
+  -> grads (optionally microbatched with int8 error-feedback accumulators)
+  -> AdamW (train/optimizer.py)
+with in/out shardings derived from the model's logical axes
+(sharding/specs.py), so the same builder serves the CPU examples, the
+single-pod mesh and the 512-chip multi-pod dry-run.
+
+``fit`` is the production driver: checkpoint/restart (elastic resharding
+restore via ckpt/manager.py), preemption-safe async saves, a straggler/hang
+watchdog, and deterministic seekable data (data/pipeline.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.data.pipeline import DataConfig, make_batch
+from repro.models import abstract_params_and_axes, init_params_and_axes, loss_fn
+from repro.sharding.specs import spec_for, tree_shardings, use_mesh
+from repro.train import compression
+from repro.train.optimizer import (OptConfig, OptState, apply_updates,
+                                   init_opt_state)
+
+from jax.sharding import NamedSharding
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    steps: int = 200
+    microbatches: int = 1            # gradient accumulation
+    remat: str = "none"              # none | dots | full
+    compress_grads: bool = False     # int8 error-feedback accumulation
+    ckpt_dir: str | None = None
+    ckpt_every: int = 50
+    log_every: int = 10
+    watchdog_secs: float = 0.0       # >0: warn when a step stalls
+
+
+# ---------------------------------------------------------------------------
+# step builder
+# ---------------------------------------------------------------------------
+
+def batch_logical_axes(batch_like: dict) -> dict:
+    out = {}
+    for k, v in batch_like.items():
+        nd = v.ndim if hasattr(v, "ndim") else len(v.shape)
+        out[k] = ("batch",) + (None,) * (nd - 1)
+    return out
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: OptConfig,
+                    tc: TrainConfig) -> Callable:
+    """Returns train_step(params, opt_state, err_state, batch) ->
+    (params, opt_state, err_state, metrics)."""
+
+    def grads_of(params, batch):
+        (l, m), g = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, batch, remat=tc.remat),
+            has_aux=True)(params)
+        return l, m, g
+
+    def step(params, opt_state, err_state, batch):
+        if tc.microbatches > 1:
+            def micro(carry, mb):
+                acc, err = carry
+                l, m, g = grads_of(params, mb)
+                if tc.compress_grads:
+                    q, s, err = compression.compress_tree(g, err)
+                    g = compression.decompress_tree(q, s)
+                acc = jax.tree.map(jnp.add, acc, g)
+                return (acc, err), l
+            mbs = jax.tree.map(
+                lambda x: x.reshape((tc.microbatches,
+                                     x.shape[0] // tc.microbatches)
+                                    + x.shape[1:]), batch)
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (g, err_state), losses = jax.lax.scan(
+                micro, (zero, err_state), mbs)
+            g = jax.tree.map(lambda x: x / tc.microbatches, g)
+            loss = losses.mean()
+            metrics = {}
+        else:
+            loss, metrics, g = grads_of(params, batch)
+            if tc.compress_grads:
+                q, s, err_state = compression.compress_tree(g, err_state)
+                g = compression.decompress_tree(q, s)
+        params, opt_state, stats = apply_updates(opt_cfg, params, g, opt_state)
+        out = {"loss": loss, **stats}
+        out.update({k: v for k, v in metrics.items()})
+        return params, opt_state, err_state, out
+
+    return step
+
+
+def make_sharded_train_step(cfg: ArchConfig, opt_cfg: OptConfig,
+                            tc: TrainConfig, mesh, batch_like: dict,
+                            donate: bool = True):
+    """jit the step with shardings derived from logical axes.  Returns
+    (step_fn, param_sharding_tree, batch_sharding_tree)."""
+    params_abs, axes = abstract_params_and_axes(cfg)
+    p_sh = tree_shardings(axes, mesh, params_abs)
+    repl = NamedSharding(mesh, spec_for((), mesh=mesh))
+    opt_sh = OptState(repl, p_sh, p_sh)
+    err_sh = p_sh if tc.compress_grads else None
+    b_axes = batch_logical_axes(batch_like)
+    b_sh = {k: NamedSharding(mesh, spec_for(ax, mesh=mesh))
+            for k, ax in b_axes.items()}
+
+    step = make_train_step(cfg, opt_cfg, tc)
+    jit_kwargs = dict(
+        in_shardings=(p_sh, opt_sh, err_sh, b_sh),
+        out_shardings=(p_sh, opt_sh, err_sh, None),
+    )
+    if donate:
+        jit_kwargs["donate_argnums"] = (0, 1, 2)
+    return jax.jit(step, **jit_kwargs), p_sh, b_sh
+
+
+# ---------------------------------------------------------------------------
+# fault-tolerant driver
+# ---------------------------------------------------------------------------
+
+class _Preempt:
+    """SIGTERM -> finish the current step, save, exit cleanly."""
+
+    def __init__(self):
+        self.flag = False
+        try:
+            signal.signal(signal.SIGTERM, self._h)
+        except ValueError:
+            pass  # non-main thread (tests)
+
+    def _h(self, *_):
+        self.flag = True
+
+
+def fit(cfg: ArchConfig, dc: DataConfig, opt_cfg: OptConfig, tc: TrainConfig,
+        *, mesh=None, resume: bool = True, seed: int = 0,
+        log: Callable[[str], None] = print) -> dict:
+    """End-to-end training with checkpoint/restart.  Returns final metrics."""
+    from repro.ckpt.manager import CheckpointManager
+
+    params, axes = init_params_and_axes(cfg, jax.random.key(seed))
+    opt_state = init_opt_state(params)
+    err_state = (compression.init_error_state(params)
+                 if tc.compress_grads else None)
+    batch0 = make_batch(dc, 0)
+
+    if mesh is not None:
+        ctx = use_mesh(mesh)
+        ctx.__enter__()
+        step_fn, p_sh, b_sh = make_sharded_train_step(
+            cfg, opt_cfg, tc, mesh, batch0)
+        params = jax.device_put(params, p_sh)
+        opt_state = jax.device_put(opt_state, OptState(
+            NamedSharding(mesh, spec_for((), mesh=mesh)), p_sh, p_sh))
+        if err_state is not None:
+            err_state = jax.device_put(err_state, p_sh)
+    else:
+        ctx = None
+        step_fn = jax.jit(make_train_step(cfg, opt_cfg, tc),
+                          donate_argnums=(0, 1, 2))
+        p_sh = b_sh = None
+
+    mgr = CheckpointManager(tc.ckpt_dir) if tc.ckpt_dir else None
+    start = 0
+    if mgr and resume and mgr.latest_step() is not None:
+        tmpl = {"params": params, "opt": opt_state}
+        sh = {"params": p_sh, "opt": OptState(
+            NamedSharding(mesh, spec_for((), mesh=mesh)), p_sh, p_sh)} \
+            if mesh is not None else None
+        restored, extra, step_no = mgr.restore(None, tmpl, sh)
+        params, opt_state = restored["params"], restored["opt"]
+        start = step_no
+        log(f"[ckpt] resumed from step {start}")
+
+    pre = _Preempt()
+    metrics = {}
+    t_step = time.time()
+    try:
+        for it in range(start, tc.steps):
+            batch = make_batch(dc, it)
+            batch = ({k: jax.device_put(v, b_sh[k]) for k, v in batch.items()}
+                     if b_sh else {k: jnp.asarray(v) for k, v in batch.items()})
+            params, opt_state, err_state, metrics = step_fn(
+                params, opt_state, err_state, batch)
+            if tc.watchdog_secs and (time.time() - t_step) > tc.watchdog_secs:
+                log(f"[watchdog] step {it} took {time.time()-t_step:.1f}s "
+                    "(straggler suspected)")
+            t_step = time.time()
+            if it % tc.log_every == 0 or it == tc.steps - 1:
+                log(f"step {it:5d} loss {float(metrics['loss']):.4f} "
+                    f"gnorm {float(metrics['gnorm']):.3f} "
+                    f"lr {float(metrics['lr']):.2e}")
+            if mgr and ((it + 1) % tc.ckpt_every == 0 or pre.flag
+                        or it == tc.steps - 1):
+                mgr.save_async(it + 1, {"params": params, "opt": opt_state},
+                               extra={"loss": float(metrics["loss"])})
+            if pre.flag:
+                log("[preempt] SIGTERM received; checkpoint queued, exiting")
+                break
+        if mgr:
+            mgr.wait()
+    finally:
+        if ctx is not None:
+            ctx.__exit__(None, None, None)
+    return {k: float(v) for k, v in metrics.items()}

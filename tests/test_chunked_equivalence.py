@@ -1,0 +1,90 @@
+"""Long-context chunked paths == naive references (attention, Mamba scan,
+chunkwise mLSTM) and parallel == recurrent forms."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.models.attention as A
+import repro.models.layers as L
+import repro.models.ssm as S
+import repro.models.xlstm as X
+from repro.configs import get_config, reduce_for_smoke
+
+KEY = jax.random.key(0)
+
+
+@pytest.mark.parametrize("window", [0, 64])
+@pytest.mark.parametrize("causal", [True, False])
+def test_chunked_attention_matches_plain(window, causal):
+    B, Sq, H, KV, hd = 2, 256, 8, 4, 16
+    q = jax.random.normal(KEY, (B, Sq, H, hd))
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (B, Sq, KV, hd))
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (B, Sq, KV, hd))
+    ref = A._sdpa(q, k, v, A.make_mask(Sq, Sq, causal=causal, window=window))
+    chk = A.chunked_sdpa(q, k, v, causal=causal, window=window,
+                         q_chunk=64, k_chunk=64)
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(chk),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_chunked_ssm_matches_single_chunk():
+    cfg = reduce_for_smoke(get_config("hymba-1.5b"))
+    pv, _ = L.split_tree(S.ssm_init(jax.random.key(3), cfg))
+    xz = jax.random.normal(jax.random.key(4), (2, 128, 2 * cfg.d_model))
+    old = S.SSM_CHUNK
+    try:
+        S.SSM_CHUNK = 128
+        full = S.ssm_scan(pv, xz, cfg)
+        S.SSM_CHUNK = 16
+        chunked = S.ssm_scan(pv, xz, cfg)
+    finally:
+        S.SSM_CHUNK = old
+    np.testing.assert_allclose(np.asarray(full), np.asarray(chunked),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_ssm_scan_matches_stepwise():
+    cfg = reduce_for_smoke(get_config("hymba-1.5b"))
+    pv, _ = L.split_tree(S.ssm_init(jax.random.key(5), cfg))
+    T = 24
+    xz = jax.random.normal(jax.random.key(6), (2, T, 2 * cfg.d_model)) * 0.3
+    full = S.ssm_scan(pv, xz, cfg)
+    st = S.ssm_state_init(cfg, 2)
+    st = {"h": st["h"], "conv": st["conv"].astype(xz.dtype)}
+    outs = []
+    for t in range(T):
+        o, st = S.ssm_step(pv, xz[:, t:t + 1], st, cfg)
+        outs.append(o)
+    step = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(step),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_chunked_mlstm_matches_and_recurrent():
+    cfg = reduce_for_smoke(get_config("xlstm-125m"))
+    pv, _ = L.split_tree(X.xlstm_init(jax.random.key(7), cfg))
+    x = jax.random.normal(jax.random.key(8), (2, 64, cfg.d_model)) * 0.1
+    old = X.MLSTM_CHUNK
+    try:
+        X.MLSTM_CHUNK = 64
+        full = X.mlstm_parallel(pv, x)
+        X.MLSTM_CHUNK = 16
+        chunked = X.mlstm_parallel(pv, x)
+    finally:
+        X.MLSTM_CHUNK = old
+    np.testing.assert_allclose(np.asarray(full), np.asarray(chunked),
+                               rtol=1e-3, atol=1e-3)
+    # recurrent form
+    H = cfg.n_heads
+    hd = cfg.d_model // H
+    st = {"C": jnp.zeros((2, H, hd, hd)), "n": jnp.zeros((2, H, hd)),
+          "m": jnp.full((2, H), -1e30)}
+    outs = []
+    for t in range(16):
+        o, st = X.mlstm_step(pv, x[:, t:t + 1], st)
+        outs.append(o)
+    rec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(rec), np.asarray(full[:, :16]),
+                               rtol=2e-3, atol=2e-3)

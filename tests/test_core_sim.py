@@ -1,0 +1,222 @@
+"""Unit + invariant tests for the Trimma core simulator."""
+
+import numpy as np
+import pytest
+
+from repro.core import (DDR5_NVM, HBM3_DDR5, IDENTITY, WORKLOADS, SimConfig,
+                        alloy, generate_trace, ideal, linear_cache, lohhill,
+                        make_geometry, mempod, relabel_first_touch, run,
+                        trimma_cache, trimma_flat)
+from repro.core.simulator import home_block, leaf_fwd, leaf_inv, static_tables
+
+SMALL = dict(fast_total_blocks=512, ratio=8, n_sets=4)
+TRACE_LEN = 8192
+
+
+def _trace(cfg, name="pr", seed=0, length=TRACE_LEN):
+    spec = WORKLOADS[name]
+    blocks, writes = generate_trace(spec, cfg.slow_blocks, length, seed)
+    if cfg.mode == "flat":
+        blocks = relabel_first_touch(blocks)
+    return blocks, writes
+
+
+# ---------------------------------------------------------------------------
+# config / geometry
+# ---------------------------------------------------------------------------
+
+def test_linear_table_occupies_half_fast_at_32_to_1():
+    # Section 2.2: (32+1) * 4 / 256 = 52% of fast memory
+    cfg = linear_cache(fast_total_blocks=2048, ratio=32)
+    frac = cfg.meta_reserved_blocks / cfg.fast_total_blocks
+    assert 0.45 < frac < 0.55
+
+
+def test_linear_table_collapses_at_64_to_1_flat():
+    # Section 5.3: at 64:1 the linear table swallows the fast tier
+    with pytest.raises(ValueError):
+        mempod(fast_total_blocks=2048, ratio=64).fast_data_slots
+
+
+def test_irt_reserves_same_region_but_lends_it():
+    cfg = trimma_cache(fast_total_blocks=2048, ratio=32)
+    lin = linear_cache(fast_total_blocks=2048, ratio=32)
+    assert cfg.fast_meta_slots > 0
+    # iRT's reserved region is at least the linear table (it adds inverse
+    # entries + intermediate levels), but all leaf blocks are lendable
+    assert cfg.meta_reserved_blocks >= lin.meta_reserved_blocks
+    assert cfg.fast_slots > cfg.fast_data_slots
+
+
+def test_geometry_leaf_tables_are_inverse():
+    g = make_geometry(trimma_cache(**SMALL))
+    tab = static_tables(g)
+    for slot, leaf in enumerate(tab["leaf_hosted"]):
+        if leaf >= 0:
+            assert tab["slot_of_leaf"][leaf] == slot
+    for leaf, slot in enumerate(tab["slot_of_leaf"]):
+        if slot >= 0:
+            assert tab["leaf_hosted"][slot] == leaf
+
+
+def test_leaf_ids_in_range():
+    g = make_geometry(trimma_cache(**SMALL))
+    b = np.arange(g.cfg.n_phys)
+    lf = np.asarray(leaf_fwd(g, b))
+    assert lf.min() >= 0 and lf.max() < g.n_leaf
+    v = np.arange(g.fast_slots)
+    li = np.asarray(leaf_inv(g, v))
+    assert li.min() >= g.lf - 1 and li.max() < g.n_leaf
+
+
+def test_home_roundtrip_flat():
+    g = make_geometry(trimma_flat(**SMALL))
+    for v in range(0, g.fast_slots):
+        if v % g.k < g.k_data:  # data slot
+            b = int(home_block(g, v))
+            assert b < g.fast_home_blocks
+    b = np.arange(g.fast_home_blocks)
+    from repro.core.simulator import home_slot
+    v = np.asarray(home_slot(g, b))
+    assert np.array_equal(np.asarray(home_block(g, v)), b)
+
+
+# ---------------------------------------------------------------------------
+# end-state invariants (the heart of correctness)
+# ---------------------------------------------------------------------------
+
+def _check_state_invariants(cfg, out):
+    st = out["_state"]
+    g = make_geometry(cfg)
+    tab = static_tables(g)
+    remap = np.asarray(st["remap"])
+    owner = np.asarray(st["slot_owner"])
+    leaf_cnt = np.asarray(st["leaf_cnt"])
+
+    # 1. slot_owner and remap are mutually consistent
+    for v in range(g.fast_slots):
+        o = owner[v]
+        if o >= 0:
+            if cfg.mode == "flat" and not tab["slot_is_meta"][v] \
+                    and o == int(home_block(g, v)):
+                assert remap[o] == IDENTITY, (v, o)
+            else:
+                assert remap[o] == v, (v, o, remap[o])
+    fwd_fast = np.nonzero(remap >= 0)[0]
+    for p in fwd_fast:
+        assert owner[remap[p]] == p, (p, remap[p], owner[remap[p]])
+
+    # 2. at most one block maps to each fast slot
+    vals = remap[fwd_fast]
+    assert len(np.unique(vals)) == len(vals)
+
+    # 3. leaf counts == recomputed from remap + meta-slot occupancy
+    if cfg.meta == "irt" and cfg.irt_levels >= 2:
+        expect = np.zeros_like(leaf_cnt)
+        nonid = np.nonzero(remap != IDENTITY)[0]
+        np.add.at(expect, np.asarray(leaf_fwd(g, nonid)), 1)
+        meta_occ = np.nonzero((owner >= 0) & tab["slot_is_meta"])[0]
+        np.add.at(expect, np.asarray(leaf_inv(g, meta_occ)), 1)
+        assert np.array_equal(expect, leaf_cnt), \
+            (np.nonzero(expect != leaf_cnt), expect.sum(), leaf_cnt.sum())
+
+    # 4. metadata-priority: no data cached in a slot whose leaf is allocated
+    for v in range(g.fast_slots):
+        if tab["slot_is_meta"][v] and owner[v] >= 0:
+            h = tab["leaf_hosted"][v]
+            if h >= 0:
+                # the hosted leaf may count ONLY the entries of this slot's
+                # own occupant (fwd of owner / inv of slot)
+                contrib = int(np.asarray(leaf_fwd(g, owner[v])) == h) \
+                    + int(np.asarray(leaf_inv(g, v)) == h)
+                assert leaf_cnt[h] <= contrib, (v, h, leaf_cnt[h])
+
+    # 5. no remap-cache inconsistency was ever observed
+    assert out["rc_incons"] == 0
+
+
+@pytest.mark.parametrize("mode", ["cache", "flat"])
+@pytest.mark.parametrize("wl", ["pr", "lbm", "ycsb_a"])
+def test_trimma_invariants(mode, wl):
+    cfg = trimma_cache(**SMALL) if mode == "cache" else trimma_flat(**SMALL)
+    blocks, writes = _trace(cfg, wl)
+    out = run(cfg, HBM3_DDR5, blocks, writes)
+    _check_state_invariants(cfg, out)
+    assert out["n_acc"] == len(blocks)
+    assert 0 <= out["serve_rate"] <= 1
+
+
+@pytest.mark.parametrize("mk", [linear_cache, mempod])
+def test_linear_invariants(mk):
+    cfg = mk(**SMALL)
+    blocks, writes = _trace(cfg)
+    out = run(cfg, HBM3_DDR5, blocks, writes)
+    _check_state_invariants(cfg, out)
+
+
+@pytest.mark.parametrize("mk", [alloy, lohhill, ideal])
+def test_baselines_run(mk):
+    cfg = mk(**SMALL)
+    blocks, writes = _trace(cfg)
+    out = run(cfg, HBM3_DDR5, blocks, writes)
+    assert out["serve_fast"] + out["installs"] >= out["n_acc"] * 0.99
+    assert out["t_total"] > 0
+
+
+def test_metadata_savings_vs_linear():
+    """Figure 9: iRT's end-of-run metadata is far below the linear table.
+
+    Uses the paper-scale 32:1 geometry — at tiny ratios the savings shrink
+    (consistent with Figure 12a's trend)."""
+    cfg = trimma_cache()
+    lin = linear_cache()
+    blocks, writes = _trace(cfg, "cactuBSSN")
+    out = run(cfg, HBM3_DDR5, blocks, writes)
+    out_lin = run(lin, HBM3_DDR5, blocks, writes)
+    assert out["metadata_blocks"] < 0.75 * out_lin["metadata_blocks"], \
+        (out["metadata_blocks"], out_lin["metadata_blocks"])
+
+
+def test_irc_beats_conventional_coverage():
+    """Figure 11 direction: iRC hit rate >= conventional on a skewed trace."""
+    base = dict(**SMALL)
+    cfg_irc = trimma_cache(**base)
+    cfg_conv = SimConfig(mode="cache", meta="irt", remap_cache="conventional",
+                         **base).validate()
+    blocks, writes = _trace(cfg_irc, "ycsb_b", length=16384)
+    hit_irc = run(cfg_irc, HBM3_DDR5, blocks, writes)["rc_hit_rate"]
+    hit_conv = run(cfg_conv, HBM3_DDR5, blocks, writes)["rc_hit_rate"]
+    assert hit_irc >= hit_conv - 0.02, (hit_irc, hit_conv)
+
+
+def test_nvm_timing_penalises_writes():
+    cfg = trimma_cache(**SMALL)
+    blocks, writes = _trace(cfg, "ycsb_a")
+    t_hbm = run(cfg, HBM3_DDR5, blocks, writes)["t_total"]
+    t_nvm = run(cfg, DDR5_NVM, blocks, writes)["t_total"]
+    assert t_nvm > 0 and t_hbm > 0
+
+
+def test_deterministic():
+    cfg = trimma_cache(**SMALL)
+    blocks, writes = _trace(cfg)
+    a = run(cfg, HBM3_DDR5, blocks, writes)
+    b = run(cfg, HBM3_DDR5, blocks, writes)
+    for k in ("serve_fast", "rc_hit", "by_fast", "cyc_slow"):
+        assert a[k] == b[k]
+
+
+def test_dealloc_hints_recycle_entries():
+    """Beyond-paper (Section 3.5): software dealloc hints shrink the live
+    iRT and never break the translation invariants."""
+    from repro.core import with_deallocs
+    import dataclasses
+    cfg = trimma_cache(**SMALL)
+    cfg_h = dataclasses.replace(cfg, dealloc_hints=True)
+    blocks, writes = _trace(cfg, "pr", length=8192)
+    deall = with_deallocs(blocks, frac=0.08)
+    base = run(cfg, HBM3_DDR5, blocks, writes)
+    hint = run(cfg_h, HBM3_DDR5, blocks, writes, deall)
+    _check_state_invariants(cfg_h, hint)
+    assert hint["deallocs"] > 0
+    assert hint["metadata_blocks"] <= base["metadata_blocks"]

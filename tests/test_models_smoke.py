@@ -1,0 +1,163 @@
+"""Per-architecture smoke tests: reduced config of the same family, one
+forward + one train-grad step + one decode step on CPU; asserts shapes and
+finiteness (deliverable f)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ALL_ARCHS, SHAPES, get_config, reduce_for_smoke
+from repro.models import (decode_step, forward, init_decode_state,
+                          init_params, loss_fn, prefill)
+
+B, S = 2, 32
+
+
+def _batch(cfg, key):
+    ks = jax.random.split(key, 3)
+    batch = {}
+    if cfg.embed_inputs:
+        batch["embeds"] = jax.random.normal(ks[0], (B, S, cfg.d_model),
+                                            jnp.float32)
+    else:
+        batch["tokens"] = jax.random.randint(ks[0], (B, S), 0, cfg.vocab)
+    batch["labels"] = jax.random.randint(ks[1], (B, S), 0, cfg.vocab)
+    if cfg.family == "vlm":
+        batch["image_embeds"] = jax.random.normal(
+            ks[2], (B, cfg.n_image_tokens, cfg.d_model), jnp.float32)
+    return batch
+
+
+@pytest.fixture(scope="module", params=ALL_ARCHS)
+def arch(request):
+    full = get_config(request.param)
+    cfg = reduce_for_smoke(full)
+    params = init_params(cfg, jax.random.key(0))
+    return full, cfg, params
+
+
+def test_forward_shapes_finite(arch):
+    full, cfg, params = arch
+    batch = _batch(cfg, jax.random.key(1))
+    logits, aux, _ = jax.jit(
+        lambda p, b: forward(cfg, p, b))(params, batch)
+    assert logits.shape == (B, S, cfg.vocab)
+    assert np.isfinite(np.asarray(logits)).all()
+    assert np.isfinite(float(aux))
+
+
+def test_train_grad_step(arch):
+    full, cfg, params = arch
+    batch = _batch(cfg, jax.random.key(2))
+
+    def loss(p):
+        return loss_fn(cfg, p, batch)[0]
+
+    val, grads = jax.jit(jax.value_and_grad(loss))(params)
+    assert np.isfinite(float(val)) and float(val) > 0
+    leaves = jax.tree.leaves(grads)
+    assert all(np.isfinite(np.asarray(g)).all() for g in leaves)
+    # gradients actually flow to the embedding / input-side params
+    gnorm = sum(float(jnp.sum(jnp.square(g.astype(jnp.float32))))
+                for g in leaves)
+    assert gnorm > 0
+
+
+def test_remat_matches_no_remat(arch):
+    full, cfg, params = arch
+    batch = _batch(cfg, jax.random.key(3))
+    l0 = float(loss_fn(cfg, params, batch, remat="none")[0])
+    l1 = float(loss_fn(cfg, params, batch, remat="full")[0])
+    assert abs(l0 - l1) < 1e-3 * max(abs(l0), 1.0)
+
+
+def test_decode_step(arch):
+    full, cfg, params = arch
+    if cfg.is_encoder:
+        pytest.skip("encoder-only arch has no decode step")
+    state = init_decode_state(cfg, B, S)
+    tokens = jnp.zeros((B,), jnp.int32)
+    logits, state = jax.jit(
+        lambda p, s, t: decode_step(cfg, p, s, t))(params, state, tokens)
+    assert logits.shape == (B, cfg.vocab)
+    assert np.isfinite(np.asarray(logits)).all()
+    assert int(state.pos) == 1
+    logits2, state = decode_step(cfg, params, state, tokens)
+    assert int(state.pos) == 2
+    assert np.isfinite(np.asarray(logits2)).all()
+
+
+def test_prefill_then_decode_consistency(arch):
+    """Decode after prefill must reproduce forward()'s next-token logits
+    (exact cache equivalence for attention archs)."""
+    full, cfg, params = arch
+    if cfg.is_encoder:
+        pytest.skip("encoder-only")
+    if cfg.family in ("ssm", "hybrid"):
+        pytest.skip("recurrent prefill state is rebuilt (documented)")
+    batch = _batch(cfg, jax.random.key(4))
+    logits_fwd, _, _ = forward(cfg, params, batch)
+    _, state = prefill(cfg, params, batch, max_len=S + 4)
+    nxt = jnp.argmax(logits_fwd[:, -2], axis=-1).astype(jnp.int32)
+    # feed token S-1 through decode at pos S-1 using a cache holding 0..S-2:
+    # instead compare: decode of last prompt token vs forward's last logits
+    _, state_m1 = prefill(cfg, params,
+                          _trim(batch, S - 1), max_len=S + 4)
+    last_tok = (batch["tokens"][:, -1] if "tokens" in batch else None)
+    if last_tok is None:
+        pytest.skip("embed-input arch")
+    logits_dec, _ = decode_step(cfg, params, state_m1, last_tok)
+    np.testing.assert_allclose(np.asarray(logits_dec),
+                               np.asarray(logits_fwd[:, -1]),
+                               rtol=2e-2, atol=2e-2)
+
+
+def _trim(batch, s):
+    out = {}
+    for k, v in batch.items():
+        if k in ("tokens", "embeds", "labels"):
+            out[k] = v[:, :s]
+        else:
+            out[k] = v
+    return out
+
+
+def test_full_config_numbers():
+    """The registered configs carry the exact assigned numbers."""
+    c = get_config("qwen2-72b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab) == (80, 8192, 64, 8, 29568, 152064)
+    assert c.qkv_bias
+    m = get_config("mixtral-8x22b")
+    assert (m.n_experts, m.top_k, m.sliding_window) == (8, 2, 4096)
+    h = get_config("hymba-1.5b")
+    assert (h.d_model, h.n_heads, h.n_kv_heads, h.ssm_state) == (1600, 25, 5, 16)
+    g = get_config("granite-moe-3b-a800m")
+    assert (g.n_experts, g.top_k, g.d_ff) == (40, 8, 512)
+    x = get_config("xlstm-125m")
+    assert x.xlstm and x.d_ff == 0
+    v = get_config("llama-3.2-vision-90b")
+    assert v.n_layers == 100 and v.cross_attn_every == 5
+    hu = get_config("hubert-xlarge")
+    assert hu.is_encoder and hu.embed_inputs
+    assert len(ALL_ARCHS) == 10
+
+
+def test_param_counts_in_expected_range():
+    """n_params() sanity vs the advertised model scale."""
+    expect = {
+        "llama3-8b": (7e9, 9e9),
+        "qwen2-7b": (6.5e9, 8.5e9),
+        "qwen2-72b": (65e9, 80e9),
+        "codeqwen1.5-7b": (6e9, 8.5e9),
+        "mixtral-8x22b": (125e9, 150e9),
+        "hymba-1.5b": (1.0e9, 2.2e9),
+        "xlstm-125m": (0.08e9, 0.22e9),
+        "hubert-xlarge": (0.7e9, 1.3e9),
+        "llama-3.2-vision-90b": (75e9, 95e9),
+        "granite-moe-3b-a800m": (2.2e9, 4.5e9),
+    }
+    for name, (lo, hi) in expect.items():
+        n = get_config(name).n_params()
+        assert lo < n < hi, (name, f"{n:.3e}")

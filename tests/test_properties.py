@@ -1,0 +1,147 @@
+"""Hypothesis property tests on the system's invariants (deliverable c)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import HBM3_DDR5, IDENTITY, run, trimma_cache
+from repro.core.simulator import leaf_fwd, leaf_inv, make_geometry, static_tables
+from repro.kernels.irt_lookup.irt_lookup import E as LEAF_E
+from repro.kernels.irt_lookup.ref import irt_lookup_ref
+from repro.sharding.specs import spec_for
+from repro.tiered import kvcache as tk
+
+SMALL = dict(fast_total_blocks=256, ratio=8, n_sets=2)
+_CFG = trimma_cache(**SMALL)
+
+
+# ---------------------------------------------------------------------------
+# simulator invariants under arbitrary access sequences
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=8, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, _CFG.n_phys - 1), st.booleans()),
+                min_size=32, max_size=256))
+def test_sim_invariants_random_traces(accesses):
+    cfg = _CFG
+    blocks = np.array([a for a, _ in accesses], np.int32)
+    writes = np.array([w for _, w in accesses], bool)
+    out = run(cfg, HBM3_DDR5, blocks, writes)
+    st_ = out["_state"]
+    g = make_geometry(cfg)
+    tab = static_tables(g)
+    remap = np.asarray(st_["remap"])
+    owner = np.asarray(st_["slot_owner"])
+    leaf_cnt = np.asarray(st_["leaf_cnt"])
+
+    # 1. translation is lossless: every non-identity points at its owner
+    fwd = np.nonzero(remap >= 0)[0]
+    assert (owner[remap[fwd]] == fwd).all()
+    # 2. no two blocks share a fast slot
+    assert len(np.unique(remap[fwd])) == len(fwd)
+    # 3. leaf counts recompute exactly
+    exp = np.zeros_like(leaf_cnt)
+    nonid = np.nonzero(remap != IDENTITY)[0]
+    np.add.at(exp, np.asarray(leaf_fwd(g, nonid)), 1)
+    meta_occ = np.nonzero((owner >= 0) & tab["slot_is_meta"])[0]
+    np.add.at(exp, np.asarray(leaf_inv(g, meta_occ)), 1)
+    assert np.array_equal(exp, leaf_cnt)
+    # 4. remap cache never served a stale value
+    assert out["rc_incons"] == 0
+    # 5. counters are conserved
+    assert out["rc_hit"] + out["walks"] == out["n_acc"]
+
+
+# ---------------------------------------------------------------------------
+# iRT lookup: identity default + table faithfulness
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(st.data())
+def test_irt_lookup_is_table_faithful(data):
+    n_leaf = data.draw(st.integers(1, 16))
+    n = n_leaf * LEAF_E
+    entries = data.draw(st.lists(st.integers(-1, 500), min_size=n,
+                                 max_size=n))
+    bits_list = data.draw(st.lists(
+        st.integers(-2**31, 2**31 - 1),
+        min_size=(n_leaf + 31) // 32, max_size=(n_leaf + 31) // 32))
+    ids = data.draw(st.lists(st.integers(0, n - 1), min_size=1, max_size=64))
+    ids = jnp.asarray(ids, jnp.int32)
+    home = ids + 1000
+    leaf = jnp.asarray(entries, jnp.int32)
+    bits = jnp.asarray(bits_list, jnp.int32)
+    out = np.asarray(irt_lookup_ref(ids, home, bits, leaf))
+    for i, pid in enumerate(np.asarray(ids)):
+        lf = pid // LEAF_E
+        alloc = (int(bits[lf // 32]) >> (lf % 32)) & 1
+        if alloc and int(leaf[pid]) != -1:
+            assert out[i] == int(leaf[pid])
+        else:
+            assert out[i] == int(home[i])   # identity default (Section 3.2)
+
+
+# ---------------------------------------------------------------------------
+# sharding: spec_for never produces an indivisible assignment
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 4096), st.integers(1, 4096), st.integers(1, 512))
+def test_spec_for_divisibility(d0, d1, d2):
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    # even on a unit mesh the invariant holds trivially; check the logic
+    # against a fake big mesh via the pure function
+    from jax.sharding import Mesh
+    import numpy as _np
+    devs = _np.asarray(jax.devices() * 512)[:512].reshape(2, 16, 16)
+    big = Mesh(devs, ("pod", "data", "model"))
+    spec = spec_for(("batch", "embed", "heads"), mesh=big,
+                    shape=(d0, d1, d2))
+    sizes = dict(pod=2, data=16, model=16)
+    for dim, assignment in zip((d0, d1, d2), spec):
+        if assignment is None:
+            continue
+        axes = (assignment,) if isinstance(assignment, str) else assignment
+        prod = 1
+        for a in axes:
+            prod *= sizes[a]
+        assert dim % prod == 0
+
+
+# ---------------------------------------------------------------------------
+# tiered KV: lookup returns the home for never-migrated pages
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(st.lists(st.integers(0, 127), min_size=1, max_size=32))
+def test_tiered_lookup_identity(pages):
+    cfg = tk.TieredConfig(n_seqs=2, max_pages_per_seq=64, page_tokens=8,
+                          n_kv_heads=1, head_dim=16, fast_data_slots=4,
+                          dtype="float32")
+    st_ = tk.init_state(cfg)
+    ids = jnp.asarray(pages, jnp.int32)[None, :]
+    table, st_ = tk.lookup(cfg, st_, ids)
+    np.testing.assert_array_equal(np.asarray(table[0]),
+                                  cfg.fast_slots + np.asarray(pages))
+
+
+# ---------------------------------------------------------------------------
+# optimizer: AdamW minimises a convex quadratic
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_adamw_descends(seed):
+    from repro.train.optimizer import OptConfig, apply_updates, init_opt_state
+    key = jax.random.key(seed)
+    target = jax.random.normal(key, (16,))
+    params = {"w": jnp.zeros((16,))}
+    opt = init_opt_state(params)
+    oc = OptConfig(lr=0.05, warmup_steps=1, total_steps=100, weight_decay=0.0)
+    loss0 = float(jnp.sum((params["w"] - target) ** 2))
+    for _ in range(60):
+        g = {"w": 2 * (params["w"] - target)}
+        params, opt, _ = apply_updates(oc, params, g, opt)
+    loss1 = float(jnp.sum((params["w"] - target) ** 2))
+    assert loss1 < 0.25 * loss0

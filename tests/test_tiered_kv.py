@@ -1,0 +1,180 @@
+"""TieredKVCache: correctness of the Trimma-managed two-tier KV store.
+
+The key property: attention through (lookup -> unified pools -> paged
+gather) must be EXACTLY the dense-cache attention, no matter which pages
+have migrated, been evicted, or force-evicted for metadata — the metadata
+scheme must be invisible to the math (the paper's translation-correctness
+requirement)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.paged_attention.ref import paged_attention_ref
+from repro.tiered import kvcache as tk
+
+# 128 logical pages -> 2 iRT leaves: one leaf carries the hot set's
+# metadata, the other's hosting slot is lendable cache space (Section 3.3)
+CFG = tk.TieredConfig(
+    n_seqs=2, max_pages_per_seq=64, page_tokens=16, n_kv_heads=2, head_dim=32,
+    fast_data_slots=4, migrate_threshold=2, dtype="float32")
+
+
+def _filled_state(key):
+    st = tk.init_state(CFG)
+    slow_k = jax.random.normal(key, st.slow_k.shape, jnp.float32)
+    slow_v = jax.random.normal(jax.random.fold_in(key, 1),
+                               st.slow_v.shape, jnp.float32)
+    return st._replace(slow_k=slow_k, slow_v=slow_v)
+
+
+def _dense_kv(st):
+    """Ground-truth dense K/V per sequence from the logical homes,
+    reading through the current mapping."""
+    ids = jnp.arange(CFG.n_logical)
+    entry = st.leaf_table[ids]
+    uk, uv = tk.unified_pools(st)
+    dev = jnp.where(entry != tk.INVALID, entry, CFG.fast_slots + ids)
+    k = uk[dev].reshape(CFG.n_seqs, CFG.max_pages_per_seq, CFG.n_kv_heads,
+                        CFG.page_tokens, CFG.head_dim)
+    return k
+
+
+def _attend(st, q, seq_len):
+    pages = jnp.arange(CFG.max_pages_per_seq)[None, :].repeat(CFG.n_seqs, 0)
+    ids = tk.logical_page(CFG, jnp.arange(CFG.n_seqs)[:, None], pages)
+    table, st = tk.lookup(CFG, st, ids)
+    uk, uv = tk.unified_pools(st)
+    sl = jnp.full((CFG.n_seqs,), seq_len, jnp.int32)
+    out = paged_attention_ref(q, uk, uv, table, sl)
+    return out, st
+
+
+def _reference(st, q, seq_len):
+    """Dense attention straight from the slow homes (canonical bytes)."""
+    ids = jnp.arange(CFG.n_logical)
+    k = st.slow_k[ids].reshape(CFG.n_seqs, -1, CFG.n_kv_heads,
+                               CFG.page_tokens, CFG.head_dim)
+    v = st.slow_v[ids].reshape(CFG.n_seqs, -1, CFG.n_kv_heads,
+                               CFG.page_tokens, CFG.head_dim)
+    k = k.transpose(0, 2, 1, 3, 4).reshape(CFG.n_seqs, CFG.n_kv_heads, -1,
+                                           CFG.head_dim)
+    v = v.transpose(0, 2, 1, 3, 4).reshape(CFG.n_seqs, CFG.n_kv_heads, -1,
+                                           CFG.head_dim)
+    s = jnp.einsum("bkgh,bkth->bkgt", q, k) / (CFG.head_dim ** 0.5)
+    pos = jnp.arange(k.shape[2])
+    s = jnp.where(pos[None, None, None, :] < seq_len, s, -1e30)
+    w = jax.nn.softmax(s, -1)
+    return jnp.einsum("bkgt,bkth->bkgh", w, v)
+
+
+@pytest.fixture
+def state():
+    return _filled_state(jax.random.key(0))
+
+
+def test_identity_only_attention_matches(state):
+    q = jax.random.normal(jax.random.key(7), (CFG.n_seqs, CFG.n_kv_heads, 4,
+                                              CFG.head_dim))
+    out, _ = _attend(state, q, seq_len=100)
+    ref = _reference(state, q, seq_len=100)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_attention_invariant_under_migration(state):
+    """Promote pages until evictions + forced evictions happen; the
+    attention output must never change."""
+    q = jax.random.normal(jax.random.key(8), (CFG.n_seqs, CFG.n_kv_heads, 4,
+                                              CFG.head_dim))
+    ref = _reference(state, q, seq_len=128)
+    st = state
+    for step in range(12):
+        out, st = _attend(st, q, seq_len=128)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)
+        st = tk.migrate_hot(CFG, st, max_moves=3)
+    assert int(st.migrations) > 0
+    # the tiny fast pool forces churn: evictions must have happened
+    assert int((st.leaf_table != tk.INVALID).sum()) <= CFG.fast_slots
+
+
+def test_metadata_invariants_after_churn(state):
+    st = state
+    key = jax.random.key(9)
+    for step in range(15):
+        pages = jax.random.randint(jax.random.fold_in(key, step),
+                                   (CFG.n_seqs, 3), 0, CFG.max_pages_per_seq)
+        ids = tk.logical_page(CFG, jnp.arange(CFG.n_seqs)[:, None], pages)
+        _, st = tk.lookup(CFG, st, ids)
+        st = tk.migrate_hot(CFG, st, max_moves=2)
+    lt = np.asarray(st.leaf_table)
+    owner = np.asarray(st.slot_owner)
+    # forward and inverse mappings agree
+    for pid in np.nonzero(lt != tk.INVALID)[0]:
+        assert owner[lt[pid]] == pid
+    for slot in np.nonzero(owner != tk.INVALID)[0]:
+        assert lt[owner[slot]] == slot
+    # leaf counts match table occupancy
+    cnt = np.zeros(CFG.n_leaf, np.int32)
+    np.add.at(cnt, np.nonzero(lt != tk.INVALID)[0] // tk.E, 1)
+    np.testing.assert_array_equal(cnt, np.asarray(st.leaf_cnt))
+    # metadata priority: an allocated leaf's hosting slot holds no data page
+    for leaf in np.nonzero(np.asarray(st.leaf_cnt) > 0)[0]:
+        h = CFG.fast_data_slots + leaf
+        if h < CFG.fast_slots:
+            assert owner[h] == tk.INVALID or owner[h] // tk.E != leaf \
+                or owner[h] == tk.INVALID
+
+
+def test_saved_space_is_used_for_caching(state):
+    """With no metadata allocated, meta-region slots back data pages
+    (Section 3.3)."""
+    st = state
+    st = st._replace(touch=st.touch.at[:6].set(5))
+    for _ in range(3):
+        st = tk.migrate_hot(CFG, st, max_moves=2)
+    owner = np.asarray(st.slot_owner)
+    # more resident pages than the data area alone could hold
+    assert (owner != tk.INVALID).sum() > 0
+    meta_used = (owner[CFG.fast_data_slots:] != tk.INVALID).sum()
+    assert meta_used >= 1, "metadata-region slots never lent out"
+
+
+def test_metadata_pages_much_smaller_than_linear(state):
+    st = state
+    st = st._replace(touch=st.touch.at[:2].set(5))
+    st = tk.migrate_hot(CFG, st, max_moves=2)
+    assert int(tk.metadata_pages(CFG, st)) <= 1
+    # linear-table equivalent would always burn n_leaf pages
+    assert CFG.n_leaf >= 1
+
+
+def test_append_token_routes_to_current_location(state):
+    st = state
+    k = jnp.ones((CFG.n_seqs, CFG.n_kv_heads, CFG.head_dim)) * 3.0
+    v = k * 2
+    st = tk.append_token(CFG, st, jnp.arange(CFG.n_seqs), k, v, pos=5)
+    # page 0 is identity -> home updated
+    np.testing.assert_allclose(np.asarray(st.slow_k[0, :, 5]),
+                               np.asarray(k[0]))
+    # migrate page 0 of seq 0, then append again -> fast copy updated
+    st = tk.migrate_one(CFG, st, jnp.int32(0), jnp.bool_(True))
+    k2 = k * 7
+    st = tk.append_token(CFG, st, jnp.arange(CFG.n_seqs), k2, v, pos=6)
+    slot = int(st.leaf_table[0])
+    np.testing.assert_allclose(np.asarray(st.fast_k[slot, :, 6]),
+                               np.asarray(k2[0]))
+
+
+def test_irc_hit_accounting(state):
+    st = state
+    pages = jnp.zeros((CFG.n_seqs, 4), jnp.int32)
+    ids = tk.logical_page(CFG, jnp.arange(CFG.n_seqs)[:, None],
+                          pages + jnp.arange(4)[None, :])
+    _, st = tk.lookup(CFG, st, ids)
+    h0 = int(st.irc_hits)
+    _, st = tk.lookup(CFG, st, ids)   # second probe: sector lines present
+    assert int(st.irc_hits) > h0
+    assert int(st.irc_id_hits) > 0

@@ -1,0 +1,116 @@
+"""Integration tests: end-to-end training, checkpoint/restart equivalence,
+gradient compression neutrality, microbatch-accumulation equivalence."""
+
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduce_for_smoke
+from repro.data.pipeline import DataConfig, make_batch
+from repro.train.loop import TrainConfig, fit, make_train_step
+from repro.train.optimizer import OptConfig, init_opt_state
+from repro.train import compression
+from repro.models import init_params, loss_fn
+
+
+def _tiny():
+    return dataclasses.replace(
+        reduce_for_smoke(get_config("llama3-8b")),
+        n_layers=2, d_model=64, vocab=256)
+
+
+CFG = _tiny()
+DC = DataConfig(vocab=CFG.vocab, seq_len=32, global_batch=4, seed=7)
+OC = OptConfig(lr=3e-3, warmup_steps=5, total_steps=60)
+
+
+def test_loss_decreases():
+    m = fit(CFG, DC, OC, TrainConfig(steps=40, log_every=100), log=lambda s: None)
+    m0 = np.log(CFG.vocab)
+    assert m["loss"] < m0, (m["loss"], m0)
+
+
+def test_checkpoint_resume_is_bitwise(tmp_path):
+    d1, d2 = str(tmp_path / "a"), str(tmp_path / "b")
+    log = lambda s: None  # noqa: E731
+    # uninterrupted 30 steps
+    m_full = fit(CFG, DC, OC, TrainConfig(steps=30, ckpt_dir=d1,
+                                          ckpt_every=100, log_every=100),
+                 log=log)
+    # 15 steps, "crash", resume to 30
+    fit(CFG, DC, OC, TrainConfig(steps=15, ckpt_dir=d2, ckpt_every=15,
+                                 log_every=100), log=log)
+    m_res = fit(CFG, DC, OC, TrainConfig(steps=30, ckpt_dir=d2,
+                                         ckpt_every=100, log_every=100),
+                resume=True, log=log)
+    assert abs(m_full["loss"] - m_res["loss"]) < 1e-5, (m_full, m_res)
+
+
+def test_compressed_grads_convergence_neutral():
+    m_plain = fit(CFG, DC, OC, TrainConfig(steps=30, log_every=100),
+                  log=lambda s: None)
+    m_comp = fit(CFG, DC, OC, TrainConfig(steps=30, compress_grads=True,
+                                          log_every=100),
+                 log=lambda s: None)
+    # int8 + error feedback: same convergence regime
+    assert m_comp["loss"] < np.log(CFG.vocab)
+    assert abs(m_comp["loss"] - m_plain["loss"]) < 0.5
+
+
+def test_microbatch_equivalence():
+    params = init_params(CFG, jax.random.key(0))
+    batch = {k: jnp.asarray(v) for k, v in make_batch(DC, 0).items()}
+    opt = init_opt_state(params)
+    s1 = make_train_step(CFG, OC, TrainConfig(microbatches=1))
+    s2 = make_train_step(CFG, OC, TrainConfig(microbatches=2))
+    p1, _, _, m1 = jax.jit(s1)(params, opt, None, batch)
+    p2, _, _, m2 = jax.jit(s2)(params, opt, None, batch)
+    # same data, same total batch: losses close, params close
+    l1 = jax.tree.leaves(p1)
+    l2 = jax.tree.leaves(p2)
+    err = max(float(jnp.abs(a - b).max()) for a, b in zip(l1, l2))
+    assert err < 5e-3, err
+
+
+def test_quantize_error_feedback_unbiased():
+    g = jax.random.normal(jax.random.key(0), (256,)) * 0.1
+    err = jnp.zeros_like(g)
+    acc = jnp.zeros_like(g)
+    for _ in range(50):
+        q, s, err = compression.quantize(g, err)
+        acc = acc + compression.dequantize(q, s)
+    np.testing.assert_allclose(np.asarray(acc / 50), np.asarray(g),
+                               atol=2e-3)
+
+
+def test_remat_policies_same_loss():
+    params = init_params(CFG, jax.random.key(1))
+    batch = {k: jnp.asarray(v) for k, v in make_batch(DC, 1).items()}
+    losses = [float(loss_fn(CFG, params, batch, remat=r)[0])
+              for r in ("none", "dots", "full")]
+    assert max(losses) - min(losses) < 1e-4, losses
+
+
+def test_preemption_checkpoint(tmp_path):
+    """SIGTERM flag -> checkpoint written, clean exit, resumable."""
+    import signal
+    d = str(tmp_path / "pre")
+    tc = TrainConfig(steps=100, ckpt_dir=d, ckpt_every=1000, log_every=1000)
+
+    calls = {"n": 0}
+    orig_log = lambda s: None  # noqa: E731
+
+    def log(s):
+        calls["n"] += 1
+        if calls["n"] == 3:     # a few steps in, simulate preemption
+            os.kill(os.getpid(), signal.SIGTERM)
+
+    m = fit(CFG, DC, OC, dataclasses.replace(tc, log_every=1), log=log)
+    from repro.ckpt.manager import CheckpointManager
+    mgr = CheckpointManager(d)
+    assert mgr.latest_step() is not None
+    assert mgr.latest_step() < 100
