@@ -1,0 +1,22 @@
+# Tier-1 verification + benchmark smoke (same steps CI runs).
+PY ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: verify test bench-smoke bench golden
+
+verify: test bench-smoke
+
+test:
+	$(PY) -m pytest -x -q
+
+bench-smoke:
+	$(PY) -m benchmarks.run --smoke
+	@test -f BENCH_smoke.json && echo "BENCH_smoke.json written"
+
+bench:
+	$(PY) -m benchmarks.run --quick
+
+# regenerate the golden simulator counters (only with a justification —
+# they pin refactors bit-for-bit; see DESIGN.md §6)
+golden:
+	$(PY) tests/golden/gen_golden.py

@@ -16,8 +16,10 @@ import dataclasses
 import os
 import time
 
+import numpy as np
+
 from repro.core import (DDR5_NVM, HBM3_DDR5, SimConfig, WORKLOADS,
-                        generate_trace, relabel_first_touch, run)
+                        generate_trace, relabel_first_touch, run, run_many)
 
 RESULTS = os.path.join(os.path.dirname(__file__), "results")
 os.makedirs(RESULTS, exist_ok=True)
@@ -93,6 +95,37 @@ def sim(scheme: str, wl: str, timing: str = "hbm3+ddr5", **over) -> dict:
     out["scheme"], out["wl"], out["timing"] = scheme, wl, timing
     _run_cache[key] = out
     return out
+
+
+def sim_sweep(scheme: str, wls: list[str], timing: str = "hbm3+ddr5",
+              **over) -> list[dict]:
+    """Simulate every workload of one geometry in a single vmapped jit.
+
+    ``core.simulator.run_many`` stacks the traces and vmaps one compiled
+    step over them: one compilation + one device dispatch per (scheme,
+    geometry) instead of one sequential scan per workload.  Results land in
+    the same cache ``sim`` reads, with identical counters (pinned by
+    tests/test_remap_engine.py), so figure code can pre-warm with a sweep
+    and keep its per-workload logic unchanged.
+    """
+    cfg = scheme_config(scheme, **over)
+    okey = tuple(sorted(over.items()))
+    missing = [wl for wl in wls
+               if (scheme, wl, timing, okey) not in _run_cache]
+    if missing:
+        tm = {"hbm3+ddr5": HBM3_DDR5, "ddr5+nvm": DDR5_NVM}[timing]
+        traces = [trace_for(wl, cfg.slow_blocks, cfg.mode == "flat")
+                  for wl in missing]
+        blocks = np.stack([t[0] for t in traces])
+        writes = np.stack([t[1] for t in traces])
+        t0 = time.time()
+        outs = run_many(cfg, tm, blocks, writes)
+        wall = (time.time() - t0) / len(missing)
+        for wl, out in zip(missing, outs):
+            out["wall_s"] = wall
+            out["scheme"], out["wl"], out["timing"] = scheme, wl, timing
+            _run_cache[(scheme, wl, timing, okey)] = out
+    return [_run_cache[(scheme, wl, timing, okey)] for wl in wls]
 
 
 def write_csv(name: str, rows: list[dict]) -> str:

@@ -7,7 +7,7 @@ flat-mode to MemPod; `quick=True` trims the workload list for CI.
 
 from __future__ import annotations
 
-from .common import WLS, geomean, scheme_config, sim, write_csv
+from .common import WLS, geomean, scheme_config, sim, sim_sweep, write_csv
 
 QUICK_WLS = ["pr", "xz", "ycsb_b", "lbm"]
 
@@ -56,6 +56,10 @@ def fig1_associativity(quick=False):
 
 def fig7_overall(quick=False, timing="hbm3+ddr5"):
     rows = []
+    # pre-warm the run cache with one vmapped sweep per scheme: all
+    # workloads of a geometry simulate in parallel under a single jit
+    for scheme in ("alloy", "lohhill", "trimma_c", "mempod", "trimma_f"):
+        sim_sweep(scheme, _wls(quick), timing)
     for wl in _wls(quick):
         alloy = sim("alloy", wl, timing)
         lh = sim("lohhill", wl, timing)

@@ -79,7 +79,9 @@ def bench() -> list[dict]:
                      derived="4 moves"))
 
     # simulator throughput
-    from repro.core import HBM3_DDR5, WORKLOADS, generate_trace, run, trimma_cache
+    import numpy as np
+    from repro.core import (HBM3_DDR5, WORKLOADS, generate_trace, run,
+                            run_many, trimma_cache)
     scfg = trimma_cache()
     blocks, writes = generate_trace(WORKLOADS["pr"], scfg.n_phys, 16384, 1)
     run(scfg, HBM3_DDR5, blocks, writes)  # compile
@@ -88,4 +90,19 @@ def bench() -> list[dict]:
     dt = time.perf_counter() - t0
     rows.append(dict(name="simulator_trimma_c", us_per_call=dt * 1e6,
                      derived=f"{16384/dt/1e3:.0f}k acc/s"))
+
+    # vmapped sweep: 4 workloads of the same geometry in one jit
+    wls = ["pr", "lbm", "ycsb_a", "tc"]
+    traces = [generate_trace(WORKLOADS[w], scfg.n_phys, 16384, 1)
+              for w in wls]
+    mb = np.stack([t[0] for t in traces])
+    mw = np.stack([t[1] for t in traces])
+    run_many(scfg, HBM3_DDR5, mb, mw)  # compile
+    t0 = time.perf_counter()
+    run_many(scfg, HBM3_DDR5, mb, mw)
+    dt_many = time.perf_counter() - t0
+    rows.append(dict(
+        name="simulator_run_many_4", us_per_call=dt_many * 1e6,
+        derived=f"{4*16384/dt_many/1e3:.0f}k acc/s "
+                f"({4*dt/max(dt_many,1e-9):.1f}x vs sequential)"))
     return rows

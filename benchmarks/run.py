@@ -5,17 +5,81 @@ Prints ``name,us_per_call,derived`` CSV rows (the harness contract); the
 detailed per-figure data lands in benchmarks/results/*.csv.
 
 Usage:
-  PYTHONPATH=src python -m benchmarks.run [--quick] [--skip-sim]
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--skip-sim] [--smoke]
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import sys
 import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def smoke(out_path: str = "BENCH_smoke.json") -> str:
+    """CI smoke benchmark on a tiny config: the iRT-lookup / tiered-lookup
+    microbenchmarks plus a 4-trace ``run_many`` sweep of a 512-block
+    geometry.  Writes a BENCH_*.json (the harness contract) and returns its
+    path; total runtime is well under a minute on CPU."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import (HBM3_DDR5, WORKLOADS, generate_trace, run_many,
+                            trimma_cache)
+    from repro.kernels.irt_lookup.ops import irt_lookup_op
+    from repro.tiered import kvcache as tk
+
+    from .kernels_bench import _timeit
+
+    rows = []
+    key = jax.random.key(0)
+    n_leaf, N = 64, 2048
+    ids = jax.random.randint(key, (N,), 0, n_leaf * 64)
+    bits = jax.random.randint(key, ((n_leaf + 31) // 32,), -2**31,
+                              2**31 - 1, jnp.int32)
+    leaf = jax.random.randint(key, (n_leaf * 64,), -1, 999, jnp.int32)
+    us = _timeit(lambda: irt_lookup_op(ids, ids + 100000, bits, leaf),
+                 iters=20)
+    rows.append(dict(name="irt_lookup_2k", us_per_call=us,
+                     derived=f"{N/us:.1f}lookups/us"))
+
+    cfg = tk.TieredConfig(n_seqs=2, max_pages_per_seq=64, page_tokens=8,
+                          n_kv_heads=1, head_dim=16, fast_data_slots=8,
+                          dtype="float32")
+    st = tk.init_state(cfg)
+    pages = jnp.tile(jnp.arange(64)[None], (2, 1))
+    pids = tk.logical_page(cfg, jnp.arange(2)[:, None], pages)
+    lookup = jax.jit(lambda s: tk.lookup(cfg, s, pids)[1])
+    us = _timeit(lookup, st, iters=10)
+    rows.append(dict(name="tiered_lookup_128pages", us_per_call=us,
+                     derived=f"{128/us:.2f}pages/us"))
+
+    scfg = trimma_cache(fast_total_blocks=512, ratio=8, n_sets=4)
+    wls = ["pr", "lbm", "ycsb_a", "tc"]
+    traces = [generate_trace(WORKLOADS[w], scfg.slow_blocks, 4096, 0)
+              for w in wls]
+    t0 = time.time()
+    outs = run_many(scfg, HBM3_DDR5,
+                    np.stack([t[0] for t in traces]),
+                    np.stack([t[1] for t in traces]))
+    wall = time.time() - t0
+    rows.append(dict(name="sim_sweep_4x4k", us_per_call=wall * 1e6,
+                     derived=f"{4*4096/wall/1e3:.0f}k acc/s"))
+    sweep = {wl: {k: v for k, v in out.items() if k != "bound"}
+             for wl, out in zip(wls, outs)}
+
+    payload = {"rows": rows, "sweep": sweep,
+               "config": dict(fast_total_blocks=512, ratio=8, n_sets=4,
+                              trace_len=4096, workloads=wls)}
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+    for row in rows:
+        print(f"{row['name']},{row['us_per_call']:.1f},{row['derived']}")
+    return out_path
 
 
 def main() -> None:
@@ -24,9 +88,16 @@ def main() -> None:
                     help="4 workloads instead of 14")
     ap.add_argument("--skip-sim", action="store_true",
                     help="only the kernel/tiered microbenchmarks")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI smoke run; writes BENCH_smoke.json")
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
+
+    if args.smoke:
+        path = smoke()
+        print(f"smoke_json,0,\"{path}\"")
+        return
 
     from . import kernels_bench
     for row in kernels_bench.bench():

@@ -13,8 +13,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config, reduce_for_smoke
-from repro.kernels.paged_attention.ref import paged_attention_ref
 from repro.models import init_params
+from repro.serve import tiered as srv
 from repro.serve.engine import Engine, EngineConfig, Request
 from repro.tiered import kvcache as tk
 
@@ -43,16 +43,13 @@ st = st._replace(slow_k=jax.random.normal(key, st.slow_k.shape),
                                           st.slow_v.shape))
 q = jax.random.normal(jax.random.fold_in(key, 2),
                       (tcfg.n_seqs, tcfg.n_kv_heads, 4, tcfg.head_dim))
-pages = jnp.tile(jnp.arange(tcfg.max_pages_per_seq)[None], (tcfg.n_seqs, 1))
-ids = tk.logical_page(tcfg, jnp.arange(tcfg.n_seqs)[:, None], pages)
+sl = jnp.full((tcfg.n_seqs,), 512, jnp.int32)
 
 outs = []
 for step in range(6):
-    table, st = tk.lookup(tcfg, st, ids)
-    uk, uv = tk.unified_pools(st)
-    sl = jnp.full((tcfg.n_seqs,), 512, jnp.int32)
-    outs.append(paged_attention_ref(q, uk, uv, table, sl))
-    st = tk.migrate_hot(tcfg, st, max_moves=3)
+    out, st = srv.attend(tcfg, st, q, sl)
+    outs.append(out)
+    st = srv.maintain(tcfg, st, max_moves=3)
 
 drift = max(float(jnp.abs(o - outs[0]).max()) for o in outs)
 print(f"  attention drift across {len(outs)} migration rounds: {drift:.2e} "

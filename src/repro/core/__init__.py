@@ -2,15 +2,16 @@
 
 from .config import (IDENTITY, SimConfig, alloy, ideal, linear_cache, lohhill,
                      mempod, trimma_cache, trimma_flat)
-from .simulator import derive_metrics, make_geometry, metadata_blocks, run
+from .simulator import (derive_metrics, make_geometry, metadata_blocks, run,
+                        run_many)
 from .timing import DDR5_NVM, HBM3_DDR5, TIMINGS, TimingModel
 from .traces import (WORKLOADS, TraceSpec, generate_trace,
                      relabel_first_touch, with_deallocs)
 
 __all__ = [
     "IDENTITY", "SimConfig", "alloy", "ideal", "linear_cache", "lohhill",
-    "mempod", "trimma_cache", "trimma_flat", "run", "derive_metrics",
-    "metadata_blocks", "make_geometry", "TimingModel", "HBM3_DDR5",
-    "DDR5_NVM", "TIMINGS", "WORKLOADS", "TraceSpec", "generate_trace",
-    "relabel_first_touch", "with_deallocs",
+    "mempod", "trimma_cache", "trimma_flat", "run", "run_many",
+    "derive_metrics", "metadata_blocks", "make_geometry", "TimingModel",
+    "HBM3_DDR5", "DDR5_NVM", "TIMINGS", "WORKLOADS", "TraceSpec",
+    "generate_trace", "relabel_first_touch", "with_deallocs",
 ]

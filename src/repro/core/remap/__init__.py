@@ -1,0 +1,35 @@
+"""core/remap: the one batch-first Trimma metadata engine (DESIGN.md §2).
+
+The paper's contribution — multi-level iRT (Section 3.2), saved-space
+caching (Section 3.3), split identity/non-identity iRC (Section 3.4) — as
+a single pure-pytree package, batched over vectors of block/page ids.
+Three consumers share it:
+
+  core/simulator.py   batch-1 calls inside ``lax.scan`` (+ ``run_many``,
+                      a vmapped sweep over whole traces);
+  tiered/kvcache.py   page-granularity serving KV-cache;
+  kernels/irt_lookup  the Pallas walk backend ``irt.walk`` dispatches to.
+
+Modules: ``geometry`` (set/slot/leaf layout + static tables), ``rcache``
+(conventional + iRC probe/fill/invalidate), ``irt`` (table walk +
+maintenance, 1- and 2-level).
+"""
+
+from .geometry import (E, Geometry, home_block, home_slot, leaf_fwd,
+                       leaf_inv, make_geometry, static_tables)
+from .irt import (INVALID, init_tables, pack_alloc_bits, walk)
+from .irt import fill as irt_fill
+from .irt import invalidate as irt_invalidate
+from .rcache import IDENTITY, RemapCacheGeometry
+from .rcache import fill as rc_fill
+from .rcache import init_state as rc_init_state
+from .rcache import invalidate as rc_invalidate
+from .rcache import probe as rc_probe
+
+__all__ = [
+    "E", "Geometry", "make_geometry", "static_tables", "leaf_fwd",
+    "leaf_inv", "home_slot", "home_block",
+    "IDENTITY", "INVALID", "RemapCacheGeometry",
+    "rc_init_state", "rc_probe", "rc_fill", "rc_invalidate",
+    "init_tables", "pack_alloc_bits", "walk", "irt_fill", "irt_invalidate",
+]

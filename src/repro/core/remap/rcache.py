@@ -1,0 +1,271 @@
+"""Batch-first remap caches: conventional (baseline) and iRC (Section 3.4).
+
+The single implementation of the paper's remap-cache schemes, shared by the
+trace simulator (batch size 1 inside ``lax.scan``) and the tiered KV-cache
+serving path (hundreds of page ids per decode step).  All ops are pure:
+they take a state mapping of int32/uint32 arrays and return a dict holding
+*only the updated keys*, so callers can ``dict.update`` (simulator) or
+``NamedTuple._replace`` (tiered) without copying unrelated state.
+
+Conventional remap cache
+    rc_tag[S, W]  : cached block id (-1 invalid)
+    rc_val[S, W]  : device encoding (identity / fast slot / slow slot)
+    rc_fifo[S]    : FIFO fill pointer
+
+iRC (Section 3.4)
+    NonIdCache — valid (non-identity) entries only:
+        nid_tag[S, W], nid_val[S, W], nid_fifo[S]
+    IdCache — sector-cache bit vectors (1 bit per block, 32 blocks / line):
+        id_tag[S, W]  : super-block id (-1 invalid)
+        id_bits[S, W] : 32-bit identity vector (bit j == 1 -> identity)
+        id_fifo[S]
+    The IdCache uses a hash-based index (Kharbutli et al. [33]) to spread
+    the large number of identity super-blocks across sets.
+
+Batch semantics: every op takes ``ids`` of shape [N] plus per-lane enable
+masks.  With N == 1 the ops reduce exactly to the scalar per-access
+semantics the simulator's golden-counter test pins.  For N > 1, lanes that
+scatter into the same set resolve last-write-wins (an acceptable relaxation
+of per-access FIFO order at batch granularity — the structure stays
+consistent, only the replacement choice differs); disabled lanes write
+nothing (out-of-bounds drop, never a clamped no-op write that could clobber
+an enabled lane).
+
+Invariant (tests/test_properties.py, tests/test_remap_engine.py): any hit
+must agree with the ground-truth table — entries are invalidated whenever
+the underlying iRT entry changes (Section 3.4: "We simply invalidate").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+IDENTITY = -1
+_HASH_MULT = 2654435761  # Knuth multiplicative hash
+
+
+@dataclasses.dataclass(frozen=True)
+class RemapCacheGeometry:
+    """Static shape of one remap cache (Table 1, proportionally scaled)."""
+
+    kind: str = "irc"              # "irc" | "conventional" | "none" | "ideal"
+    # conventional
+    rc_sets: int = 256
+    rc_ways: int = 8
+    # iRC
+    nid_sets: int = 256
+    nid_ways: int = 6
+    id_sets: int = 32
+    id_ways: int = 16
+    sector: int = 32               # blocks covered by one IdCache line
+
+    def __post_init__(self):
+        assert self.kind in ("irc", "conventional", "none", "ideal")
+        assert self.sector == 32, "IdCache line is one uint32 lane"
+
+    @classmethod
+    def from_sim_config(cls, cfg) -> "RemapCacheGeometry":
+        return cls(kind=cfg.remap_cache, rc_sets=cfg.rc_sets,
+                   rc_ways=cfg.rc_ways, nid_sets=cfg.nid_sets,
+                   nid_ways=cfg.nid_ways, id_sets=cfg.id_sets,
+                   id_ways=cfg.id_ways, sector=cfg.id_sector_blocks)
+
+    @classmethod
+    def from_tiered_config(cls, cfg) -> "RemapCacheGeometry":
+        return cls(kind="irc", nid_sets=cfg.nid_sets, nid_ways=cfg.nid_ways,
+                   id_sets=cfg.id_sets, id_ways=cfg.id_ways)
+
+
+def _id_index(sb: jnp.ndarray, id_sets: int) -> jnp.ndarray:
+    h = (sb.astype(jnp.uint32) * jnp.uint32(_HASH_MULT)) >> jnp.uint32(16)
+    return (h % jnp.uint32(id_sets)).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# state construction
+# ---------------------------------------------------------------------------
+
+def init_state(g: RemapCacheGeometry) -> dict:
+    if g.kind == "conventional":
+        return {
+            "rc_tag": jnp.full((g.rc_sets, g.rc_ways), -1, jnp.int32),
+            "rc_val": jnp.full((g.rc_sets, g.rc_ways), IDENTITY, jnp.int32),
+            "rc_fifo": jnp.zeros((g.rc_sets,), jnp.int32),
+        }
+    if g.kind == "irc":
+        return {
+            "nid_tag": jnp.full((g.nid_sets, g.nid_ways), -1, jnp.int32),
+            "nid_val": jnp.full((g.nid_sets, g.nid_ways), IDENTITY, jnp.int32),
+            "nid_fifo": jnp.zeros((g.nid_sets,), jnp.int32),
+            "id_tag": jnp.full((g.id_sets, g.id_ways), -1, jnp.int32),
+            "id_bits": jnp.zeros((g.id_sets, g.id_ways), jnp.uint32),
+            "id_fifo": jnp.zeros((g.id_sets,), jnp.int32),
+        }
+    return {}
+
+
+# ---------------------------------------------------------------------------
+# probe
+# ---------------------------------------------------------------------------
+
+def probe(g: RemapCacheGeometry, st, ids: jnp.ndarray):
+    """Probe the remap cache for a batch of block ids [N].
+
+    Returns (hit [N], value [N], id_hit [N]) where ``value`` is the device
+    encoding (IDENTITY unless a NonIdCache hit) and ``id_hit`` flags IdCache
+    hits (their value is always IDENTITY).
+    """
+    n = ids.shape[0]
+    if g.kind == "ideal":
+        return (jnp.ones((n,), jnp.bool_),
+                jnp.full((n,), IDENTITY, jnp.int32),
+                jnp.zeros((n,), jnp.bool_))
+    if g.kind == "none":
+        return (jnp.zeros((n,), jnp.bool_),
+                jnp.full((n,), IDENTITY, jnp.int32),
+                jnp.zeros((n,), jnp.bool_))
+
+    if g.kind == "conventional":
+        s = ids % g.rc_sets
+        match = st["rc_tag"][s] == ids[:, None]
+        hit = match.any(-1)
+        val = jnp.where(match, st["rc_val"][s], 0).sum(-1).astype(jnp.int32)
+        return (hit, jnp.where(hit, val, IDENTITY).astype(jnp.int32),
+                jnp.zeros((n,), jnp.bool_))
+
+    # iRC: probe both components in parallel (Section 3.4)
+    s_n = ids % g.nid_sets
+    n_match = st["nid_tag"][s_n] == ids[:, None]
+    nid_hit = n_match.any(-1)
+    nid_val = jnp.where(n_match, st["nid_val"][s_n], 0).sum(-1).astype(jnp.int32)
+
+    sb = ids // g.sector
+    bit = (ids % g.sector).astype(jnp.uint32)
+    s_i = _id_index(sb, g.id_sets)
+    i_match = st["id_tag"][s_i] == sb[:, None]
+    line = jnp.where(i_match, st["id_bits"][s_i], jnp.uint32(0)).sum(-1)
+    id_hit = i_match.any(-1) & (((line >> bit) & jnp.uint32(1)) == 1)
+
+    hit = nid_hit | id_hit
+    val = jnp.where(nid_hit, nid_val, IDENTITY).astype(jnp.int32)
+    return hit, val, id_hit
+
+
+# ---------------------------------------------------------------------------
+# fill (after an iRT / linear-table walk)
+# ---------------------------------------------------------------------------
+
+def fill(g: RemapCacheGeometry, st, ids: jnp.ndarray, dev: jnp.ndarray,
+         table: jnp.ndarray, enable: jnp.ndarray) -> dict:
+    """Insert walked entries for ids [N] with device encodings dev [N].
+
+    ``table`` is the ground-truth remap table (simulator ``remap`` array /
+    tiered ``leaf_table``), used to assemble the sector bit vector on
+    IdCache fills — a real fill reads the neighbouring iRT entries from the
+    same leaf block.
+    """
+    if g.kind in ("ideal", "none"):
+        return {}
+
+    if g.kind == "conventional":
+        s = ids % g.rc_sets
+        w = st["rc_fifo"][s] % g.rc_ways
+        idx = jnp.where(enable, s, g.rc_sets)            # OOB -> dropped
+        return {
+            "rc_tag": st["rc_tag"].at[idx, w].set(ids, mode="drop"),
+            "rc_val": st["rc_val"].at[idx, w].set(dev, mode="drop"),
+            "rc_fifo": st["rc_fifo"].at[idx].add(1, mode="drop"),
+        }
+
+    out = {}
+    is_identity = dev == IDENTITY
+
+    # non-identity -> NonIdCache
+    en_n = enable & ~is_identity
+    s_n = ids % g.nid_sets
+    w_n = st["nid_fifo"][s_n] % g.nid_ways
+    idx = jnp.where(en_n, s_n, g.nid_sets)
+    out["nid_tag"] = st["nid_tag"].at[idx, w_n].set(ids, mode="drop")
+    out["nid_val"] = st["nid_val"].at[idx, w_n].set(dev, mode="drop")
+    out["nid_fifo"] = st["nid_fifo"].at[idx].add(1, mode="drop")
+
+    # identity -> IdCache: assemble the 32-bit vector for each super-block
+    en_i = enable & is_identity
+    sb = ids // g.sector
+    base = sb * g.sector
+    offs = base[:, None] + jnp.arange(g.sector, dtype=jnp.int32)[None, :]
+    valid = offs < table.shape[0]
+    sector = table[jnp.clip(offs, 0, table.shape[0] - 1)]
+    bits = ((sector == IDENTITY) & valid).astype(jnp.uint32)
+    vec = (bits << jnp.arange(32, dtype=jnp.uint32)[None, :]).sum(
+        -1, dtype=jnp.uint32)
+
+    s_i = _id_index(sb, g.id_sets)
+    present = st["id_tag"][s_i] == sb[:, None]
+    have_line = present.any(-1)
+    # refresh in place when present, otherwise FIFO-fill a new line
+    w_fifo = st["id_fifo"][s_i] % g.id_ways
+    w_i = jnp.where(have_line, jnp.argmax(present, -1),
+                    w_fifo).astype(jnp.int32)
+    idx = jnp.where(en_i, s_i, g.id_sets)
+    idx_new = jnp.where(en_i & ~have_line, s_i, g.id_sets)
+    out["id_tag"] = st["id_tag"].at[idx, w_i].set(sb, mode="drop")
+    out["id_bits"] = st["id_bits"].at[idx, w_i].set(vec, mode="drop")
+    out["id_fifo"] = st["id_fifo"].at[idx_new].add(1, mode="drop")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# invalidate / update-in-place (on any iRT update of block b: Section 3.4)
+# ---------------------------------------------------------------------------
+
+def invalidate(g: RemapCacheGeometry, st, ids: jnp.ndarray,
+               enable: jnp.ndarray, becomes_identity=False) -> dict:
+    """Keep the remap cache consistent with iRT updates of ids [N].
+
+    The paper invalidates at *entry* granularity ("We simply invalidate the
+    entries from iRC").  For the NonIdCache the entry is a full line, so we
+    kill it.  For the sector-organised IdCache the entry is a single bit:
+    we update the bit in place (both identity transitions are
+    representable), preserving the line's coverage of the other 31 blocks.
+    """
+    if g.kind in ("ideal", "none"):
+        return {}
+    becomes_identity = jnp.broadcast_to(
+        jnp.asarray(becomes_identity, jnp.bool_), ids.shape)
+
+    # cell-granular scatters: only the (set, way) cells a lane actually
+    # kills/updates are written, so same-set lanes in one batch can never
+    # resurrect an entry another lane just killed (a row-level write would
+    # rebroadcast the pre-call row)
+    def _cells(sets, mask, n_sets, ways):
+        rows = jnp.where(mask, sets[:, None], n_sets)            # OOB -> drop
+        cols = jnp.broadcast_to(jnp.arange(ways, dtype=jnp.int32)[None, :],
+                                mask.shape)
+        return rows, cols
+
+    if g.kind == "conventional":
+        s = ids % g.rc_sets
+        kill = (st["rc_tag"][s] == ids[:, None]) & enable[:, None]
+        rows, cols = _cells(s, kill, g.rc_sets, g.rc_ways)
+        return {"rc_tag": st["rc_tag"].at[rows, cols].set(-1, mode="drop")}
+
+    out = {}
+    s_n = ids % g.nid_sets
+    kill = (st["nid_tag"][s_n] == ids[:, None]) & enable[:, None]
+    rows, cols = _cells(s_n, kill, g.nid_sets, g.nid_ways)
+    out["nid_tag"] = st["nid_tag"].at[rows, cols].set(-1, mode="drop")
+
+    sb = ids // g.sector
+    bit = (ids % g.sector).astype(jnp.uint32)
+    s_i = _id_index(sb, g.id_sets)
+    present = (st["id_tag"][s_i] == sb[:, None]) & enable[:, None]
+    new_bit = becomes_identity.astype(jnp.uint32)
+    line = st["id_bits"][s_i]
+    upd = (line & ~(jnp.uint32(1) << bit[:, None])) \
+        | (new_bit[:, None] << bit[:, None])
+    rows, cols = _cells(s_i, present, g.id_sets, g.id_ways)
+    out["id_bits"] = st["id_bits"].at[rows, cols].set(upd, mode="drop")
+    return out

@@ -15,120 +15,37 @@ arrays carried through ``jax.lax.scan``; the per-access step is fully
 vectorised over cache ways / set slots (no data-dependent Python control
 flow), so one ``jit`` specialisation covers every workload of the same
 geometry.  Compiled steps are cached per (config, timing).
+
+The metadata structures themselves (geometry tables, conventional + iRC
+remap caches) live in ``core/remap`` (DESIGN.md §2) — the same batch-first
+engine that backs the tiered KV-cache and the Pallas kernels.  This module
+is the *policy* loop: it drives the engine at batch size 1 inside the scan.
+``run`` simulates one trace; ``run_many`` vmaps the same jitted step over a
+stack of traces so a benchmark sweep compiles once per geometry and runs
+every workload in parallel.
 """
 
 from __future__ import annotations
 
-import dataclasses
 import functools
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import irc as irc_ops
 from .config import IDENTITY, SimConfig
+from .remap import rcache as rc_ops
+from .remap.geometry import (E, Geometry, home_block, home_slot, leaf_fwd,
+                             leaf_inv, make_geometry, static_tables)
+from .remap.rcache import RemapCacheGeometry
 from .timing import TimingModel
 
-E = 64  # iRT entries per leaf metadata block (256 B / 4 B, Section 3.2)
-
-
-# ---------------------------------------------------------------------------
-# static geometry tables
-# ---------------------------------------------------------------------------
-
-@dataclasses.dataclass(frozen=True)
-class Geometry:
-    cfg: SimConfig
-    n_sets: int
-    log_sets: int
-    k_data: int            # data slots per set
-    k_meta: int            # lendable metadata slots per set
-    k: int                 # slots per set
-    lf: int                # forward leaves per set
-    li: int                # inverted leaves per set
-    n_leaf: int            # total sim-local leaves (all sets)
-    n_inter: int           # intermediate-level blocks (always allocated)
-    fast_home_blocks: int  # flat mode: blocks whose home is a fast data slot
-
-    @property
-    def fast_slots(self) -> int:
-        return self.n_sets * self.k
-
-
-def make_geometry(cfg: SimConfig) -> Geometry:
-    n_sets = cfg.n_sets
-    assert n_sets & (n_sets - 1) == 0, "n_sets must be a power of two"
-    log_sets = n_sets.bit_length() - 1
-    k_data = cfg.fast_data_slots // n_sets
-    assert k_data >= 1
-    k_meta = cfg.fast_meta_slots // n_sets
-    k = k_data + k_meta
-    bps = -(-cfg.n_phys // n_sets)           # blocks per set
-    lf = -(-bps // E)
-    li = -(-k // E)
-    n_leaf = n_sets * (lf + li)
-    track = cfg.meta == "irt" and cfg.irt_levels >= 2
-    n_inter = max(n_sets * -(-(lf + li) // (cfg.block_bytes * 8)), n_sets) \
-        if track else 0
-    fast_home = k_data * n_sets if cfg.mode == "flat" else 0
-    return Geometry(cfg, n_sets, log_sets, k_data, k_meta, k, lf, li,
-                    n_leaf, n_inter, fast_home)
-
-
-def static_tables(g: Geometry) -> dict:
-    """Precomputed numpy tables baked into the jitted step as constants."""
-    slots = np.arange(g.fast_slots, dtype=np.int32)
-    slot_set = slots // g.k
-    slot_u = slots % g.k
-    slot_is_meta = slot_u >= g.k_data
-
-    # leaf hosted at each lendable meta slot: per set, leaves [0, lf+li) are
-    # hosted in meta slots [k_data, k_data + min(k_meta, lf+li)).
-    lps = g.lf + g.li
-    hosted = np.full(g.fast_slots, -1, dtype=np.int32)
-    j = slot_u - g.k_data
-    mask = slot_is_meta & (j < lps)
-    hosted[mask] = (slot_set[mask] * lps + j[mask]).astype(np.int32)
-
-    # slot hosting each leaf (global leaf id; -1 if not lendable)
-    slot_of_leaf = np.full(max(g.n_leaf, 1), -1, dtype=np.int32)
-    valid = hosted >= 0
-    slot_of_leaf[hosted[valid]] = slots[valid]
-
-    return {
-        "slot_set": slot_set, "slot_u": slot_u,
-        "slot_is_meta": slot_is_meta.astype(np.bool_),
-        "leaf_hosted": hosted, "slot_of_leaf": slot_of_leaf,
-    }
-
-
-# --- id helpers (traced) ----------------------------------------------------
-
-def leaf_fwd(g: Geometry, b):
-    s = b & (g.n_sets - 1)
-    w = b >> g.log_sets
-    return s * (g.lf + g.li) + w // E
-
-
-def leaf_inv(g: Geometry, v):
-    s = v // g.k
-    u = v % g.k
-    return s * (g.lf + g.li) + g.lf + u // E
-
-
-def home_slot(g: Geometry, p):
-    """Flat mode: fast-home slot of phys block p (valid when p < fast_home)."""
-    s = p & (g.n_sets - 1)
-    u = p >> g.log_sets
-    return s * g.k + u
-
-
-def home_block(g: Geometry, v):
-    """Flat mode: the block whose home is data slot v."""
-    s = v // g.k
-    u = v % g.k
-    return (u << g.log_sets) | s
+__all__ = [
+    "E", "Geometry", "make_geometry", "static_tables", "leaf_fwd",
+    "leaf_inv", "home_slot", "home_block", "COUNTERS", "init_state",
+    "make_step", "make_step_tagmatch", "run", "run_many", "derive_metrics",
+    "metadata_blocks",
+]
 
 
 # ---------------------------------------------------------------------------
@@ -164,7 +81,7 @@ def init_state(cfg: SimConfig, g: Geometry) -> dict:
         st["touch"] = jnp.zeros((cfg.n_phys,), jnp.int32)
     elif cfg.install_threshold > 0:
         st["touch"] = jnp.zeros((cfg.n_phys,), jnp.int32)
-    st.update(irc_ops.init_state(cfg))
+    st.update(rc_ops.init_state(RemapCacheGeometry.from_sim_config(cfg)))
     for c in COUNTERS:
         st[c] = jnp.zeros((), jnp.int32)
     return st
@@ -188,6 +105,11 @@ def _bump(st, name, delta):
     st[name] = st[name] + jnp.asarray(delta, jnp.int32)
 
 
+def _lane(x) -> jnp.ndarray:
+    """Scalar (python or traced) -> shape-[1] lane for the batched engine."""
+    return jnp.reshape(jnp.asarray(x), (1,))
+
+
 # ---------------------------------------------------------------------------
 # per-access step for remap-table schemes (irt / linear / ideal)
 # ---------------------------------------------------------------------------
@@ -195,9 +117,16 @@ def _bump(st, name, delta):
 def make_step(cfg: SimConfig, timing: TimingModel):
     g = make_geometry(cfg)
     tab = {k: jnp.asarray(v) for k, v in static_tables(g).items()}
+    rcg = RemapCacheGeometry.from_sim_config(cfg)
     track = cfg.meta == "irt" and cfg.irt_levels >= 2
     is_flat = cfg.mode == "flat"
     blk, acc = cfg.block_bytes, cfg.access_bytes
+
+    def rc_invalidate(st, b, enable, becomes_identity=False):
+        """Batch-1 bridge into the shared engine's iRC consistency op."""
+        st.update(rc_ops.invalidate(rcg, st, _lane(b), _lane(enable),
+                                    becomes_identity))
+        return st
 
     def lf_of(b):
         return jnp.clip(leaf_fwd(g, b), 0, g.n_leaf - 1) if track else jnp.int32(0)
@@ -222,7 +151,7 @@ def make_step(cfg: SimConfig, timing: TimingModel):
         _bump(st, "by_fast", jnp.where(dirty, blk, 0))
         _bump(st, "by_slow_wr", jnp.where(dirty, blk, 0))
         _bump(st, "writebacks", jnp.where(dirty, 1, 0))
-        st.update(irc_ops.invalidate(cfg, st, o, has, becomes_identity=True))
+        st = rc_invalidate(st, o, has, becomes_identity=True)
         return st, has
 
     def force_evict_hosted(st, leaf, enable):
@@ -280,7 +209,7 @@ def make_step(cfg: SimConfig, timing: TimingModel):
             st["leaf_cnt"] = _madd(st["leaf_cnt"], li_of(v), 1, enable & is_meta)
             st = force_evict_hosted(st, lf_of(b), enable)
             st = force_evict_hosted(st, li_of(v), enable & is_meta)
-        st.update(irc_ops.invalidate(cfg, st, b, enable))
+        st = rc_invalidate(st, b, enable)
         _bump(st, "by_slow_rd", jnp.where(enable, blk, 0))
         _bump(st, "by_fast", jnp.where(enable, blk, 0))
         _bump(st, "installs", jnp.where(enable, 1, 0))
@@ -298,7 +227,7 @@ def make_step(cfg: SimConfig, timing: TimingModel):
         st["remap"] = _mset(st["remap"], o, IDENTITY, o_is_migrant)
         if track:
             st["leaf_cnt"] = _madd(st["leaf_cnt"], lf_of(o), -1, o_is_migrant)
-        st.update(irc_ops.invalidate(cfg, st, o, o_is_migrant, becomes_identity=True))
+        st = rc_invalidate(st, o, o_is_migrant, becomes_identity=True)
         _bump(st, "by_fast", jnp.where(o_is_migrant, blk, 0))
         _bump(st, "by_slow_wr", jnp.where(o_is_migrant, blk, 0))
         # 2. the displaced home block fb takes over b's slow home
@@ -309,7 +238,7 @@ def make_step(cfg: SimConfig, timing: TimingModel):
         if track:
             st["leaf_cnt"] = _madd(st["leaf_cnt"], lf_of(fb), 1,
                                    enable & fb_was_home)
-        st.update(irc_ops.invalidate(cfg, st, fb, enable))
+        st = rc_invalidate(st, fb, enable)
         _bump(st, "by_slow_wr", jnp.where(enable, blk, 0))
         _bump(st, "by_slow_rd", jnp.where(enable & ~fb_was_home, blk, 0))
         _bump(st, "by_fast", jnp.where(enable & fb_was_home, blk, 0))
@@ -321,7 +250,7 @@ def make_step(cfg: SimConfig, timing: TimingModel):
             st["leaf_cnt"] = _madd(st["leaf_cnt"], lf_of(b), 1, enable)
             st = force_evict_hosted(st, lf_of(b), enable)
             st = force_evict_hosted(st, lf_of(fb), enable)
-        st.update(irc_ops.invalidate(cfg, st, b, enable))
+        st = rc_invalidate(st, b, enable)
         _bump(st, "by_slow_rd", jnp.where(enable, blk, 0))
         _bump(st, "by_fast", jnp.where(enable, blk, 0))
         _bump(st, "swaps", jnp.where(enable, 1, 0))
@@ -351,8 +280,7 @@ def make_step(cfg: SimConfig, timing: TimingModel):
                 is_meta0 = tab["slot_is_meta"][slot0]
                 st["leaf_cnt"] = _madd(st["leaf_cnt"], li_of(slot0), -1,
                                        freed & is_meta0)
-            st.update(irc_ops.invalidate(cfg, st, b, clearable,
-                                         becomes_identity=True))
+            st = rc_invalidate(st, b, clearable, becomes_identity=True)
             if "touch" in st:
                 st["touch"] = _mset(st["touch"], b, 0, dealloc)
             _bump(st, "deallocs", jnp.where(dealloc, 1, 0))
@@ -370,7 +298,7 @@ def make_step(cfg: SimConfig, timing: TimingModel):
             hit = jnp.bool_(True)
             walk = jnp.bool_(False)
         else:
-            hit, val, id_hit = irc_ops.probe(cfg, st, b)
+            hit, val, id_hit = (x[0] for x in rc_ops.probe(rcg, st, b[None]))
             hit = hit | skip
             walk = ~hit
             _bump(st, "rc_incons", jnp.where(hit & (val != m), 1, 0))
@@ -382,7 +310,8 @@ def make_step(cfg: SimConfig, timing: TimingModel):
             _bump(st, "cyc_meta", jnp.where(walk, timing.t_fast_meta, 0))
             n_meta_acc = cfg.irt_levels if cfg.meta == "irt" else 1
             _bump(st, "by_fast", jnp.where(walk, acc * n_meta_acc, 0))
-            st.update(irc_ops.fill(cfg, st, b, m, st["remap"], walk))
+            st.update(rc_ops.fill(rcg, st, b[None], m[None], st["remap"],
+                                  _lane(walk)))
 
         # 2. data access
         if is_flat:
@@ -502,14 +431,19 @@ def make_step_tagmatch(cfg: SimConfig, timing: TimingModel):
 # run + metrics
 # ---------------------------------------------------------------------------
 
-@functools.lru_cache(maxsize=64)
-def _compiled(cfg: SimConfig, timing: TimingModel):
+def _step_and_init(cfg: SimConfig, timing: TimingModel):
     if cfg.meta in ("alloy", "lohhill"):
         step, init = make_step_tagmatch(cfg, timing)
         g = None
     else:
         step, g = make_step(cfg, timing)
         init = functools.partial(init_state, cfg, g)
+    return step, init, g
+
+
+@functools.lru_cache(maxsize=64)
+def _compiled(cfg: SimConfig, timing: TimingModel):
+    step, init, g = _step_and_init(cfg, timing)
 
     @jax.jit
     def runner(state, blocks, writes, deallocs):
@@ -517,6 +451,21 @@ def _compiled(cfg: SimConfig, timing: TimingModel):
         return state
 
     return runner, init, g
+
+
+@functools.lru_cache(maxsize=32)
+def _compiled_many(cfg: SimConfig, timing: TimingModel):
+    step, init, g = _step_and_init(cfg, timing)
+
+    @jax.jit
+    def runner(blocks, writes, deallocs):
+        def one(bl, wr, de):
+            state, _ = jax.lax.scan(step, init(), (bl, wr, de))
+            return state
+
+        return jax.vmap(one)(blocks, writes, deallocs)
+
+    return runner, g
 
 
 def run(cfg: SimConfig, timing: TimingModel, blocks: np.ndarray,
@@ -535,6 +484,42 @@ def run(cfg: SimConfig, timing: TimingModel, blocks: np.ndarray,
     out["metadata_blocks"] = metadata_blocks(cfg, g, state)
     out["_state"] = state
     return out
+
+
+def run_many(cfg: SimConfig, timing: TimingModel, blocks: np.ndarray,
+             writes: np.ndarray,
+             deallocs: np.ndarray | None = None) -> list[dict]:
+    """Vectorised sweep: simulate T same-length traces in one jitted vmap.
+
+    ``blocks``/``writes``/``deallocs`` are [T, L] stacks (e.g. several
+    workloads, or one workload at several seeds).  One compilation covers
+    every trace of the geometry; the scan runs all T lanes in parallel.
+    Returns one dict per trace with exactly the counters + derived metrics
+    ``run`` would produce for that trace alone (``_state`` is omitted — the
+    per-trace states are interleaved in device memory; use ``run`` when the
+    end state matters).
+    """
+    blocks = np.asarray(blocks)
+    writes = np.asarray(writes)
+    assert blocks.ndim == 2, "run_many expects [n_traces, trace_len]"
+    assert blocks.shape == writes.shape
+    assert blocks.shape[1] * 1024 < 2 ** 31, "int32 counter headroom"
+    assert int(blocks.max()) < cfg.n_phys, "trace exceeds physical space"
+    if deallocs is None:
+        deallocs = np.zeros(blocks.shape, bool)
+    runner, g = _compiled_many(cfg, timing)
+    state = runner(jnp.asarray(blocks, jnp.int32),
+                   jnp.asarray(writes, jnp.bool_),
+                   jnp.asarray(deallocs, jnp.bool_))
+    state = {k: np.asarray(v) for k, v in state.items()}
+    outs = []
+    for t in range(blocks.shape[0]):
+        out = {c: int(state[c][t]) for c in COUNTERS}
+        out.update(derive_metrics(cfg, timing, out))
+        out["metadata_blocks"] = metadata_blocks(
+            cfg, g, {k: v[t] for k, v in state.items()})
+        outs.append(out)
+    return outs
 
 
 def metadata_blocks(cfg: SimConfig, g: Geometry | None, state: dict) -> int:

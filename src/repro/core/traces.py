@@ -23,6 +23,7 @@ rate ~6%); see benchmarks/fig11_irc.py.
 from __future__ import annotations
 
 import dataclasses
+import zlib
 
 import numpy as np
 
@@ -75,7 +76,10 @@ def _zipf_ranks(rng: np.random.Generator, n: int, ws: int, s: float) -> np.ndarr
 def generate_trace(spec: TraceSpec, n_phys: int, length: int, seed: int = 0
                    ) -> tuple[np.ndarray, np.ndarray]:
     """Return (block_ids[int32 length], is_write[bool length])."""
-    rng = np.random.default_rng(seed ^ hash(spec.name) & 0xFFFF)
+    # crc32, not hash(): str hashing is salted per process, which would make
+    # traces (and every benchmark/golden number derived from them)
+    # irreproducible across runs
+    rng = np.random.default_rng(seed ^ zlib.crc32(spec.name.encode()) & 0xFFFF)
     ws = max(int(n_phys * spec.ws_frac), 64)
 
     # rank -> block id mapping.  Permute at 64-block (leaf-sized) chunks so

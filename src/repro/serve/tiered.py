@@ -1,0 +1,44 @@
+"""Tiered KV serving path (DESIGN.md §2 Layer C).
+
+The decode-attention read for a batch of sequences whose KV pages live
+under Trimma metadata: logical page ids -> ``tiered.kvcache.lookup``
+(iRC probe + batched iRT walk via the shared ``core/remap`` engine) ->
+unified-pool gather -> paged attention.  ``maintain`` runs the
+off-critical-path migration pass (Figure 3's step 3) between decode steps.
+
+The translation must be invisible to the math: ``attend`` returns exactly
+the dense-cache attention no matter which pages have migrated or been
+evicted (tests/test_engine.py::test_tiered_attend_invariant_under_serving).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.paged_attention.ops import paged_attention_op
+from repro.tiered import kvcache as tk
+
+
+def page_table(cfg: tk.TieredConfig, st: tk.TieredState):
+    """Full logical page-id table [n_seqs, max_pages_per_seq]."""
+    pages = jnp.arange(cfg.max_pages_per_seq, dtype=jnp.int32)[None, :]
+    seqs = jnp.arange(cfg.n_seqs, dtype=jnp.int32)[:, None]
+    return tk.logical_page(cfg, seqs, pages)
+
+
+def attend(cfg: tk.TieredConfig, st: tk.TieredState, q, seq_lens,
+           *, impl: str = "auto"):
+    """q [B, KV, G, hd], seq_lens [B] -> (attention out, new state).
+
+    One decode-attention read through the engine-translated page table;
+    the iRC/iRT lookup state advances (hit counters, cache fills)."""
+    table, st = tk.lookup(cfg, st, page_table(cfg, st))
+    uk, uv = tk.unified_pools(st)
+    return paged_attention_op(q, uk, uv, table, seq_lens, impl=impl), st
+
+
+def maintain(cfg: tk.TieredConfig, st: tk.TieredState,
+             max_moves: int = 4) -> tk.TieredState:
+    """Between decode steps: promote the hottest pages into the fast pool
+    (bounded work per call keeps the migration off the critical path)."""
+    return tk.migrate_hot(cfg, st, max_moves=max_moves)

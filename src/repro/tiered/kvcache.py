@@ -7,20 +7,27 @@ Two pools of KV pages per layer:
               DESIGN.md);
   fast pool — small HBM pool holding hot pages + the iRT metadata region.
 
-Exactly the paper's structures, at page granularity:
+Exactly the paper's structures, at page granularity — and exactly *one*
+implementation of them: every metadata op below drives the shared
+batch-first engine in ``core/remap`` (the same code the trace simulator
+runs at batch size 1):
 
-  iRT (Section 3.2)   l1_bits: one bit per leaf ("allocated?"),
-                      leaf_table [n_leaf * E]: logical page -> fast slot,
-                      entries exist ONLY for migrated (non-identity) pages;
-                      a miss at any level defaults to the slow home.
+  iRT (Section 3.2)   ``remap.irt``: l1_bits (one bit per leaf,
+                      "allocated?"), leaf_table [n_leaf * E] logical page
+                      -> fast slot; entries exist ONLY for migrated
+                      (non-identity) pages; a miss at any level defaults
+                      to the slow home.  Lookups batch hundreds of page
+                      ids; ``remap.irt.walk`` dispatches large batches to
+                      the Pallas kernel (kernels/irt_lookup) and small /
+                      off-TPU ones to the jnp reference.
   saved-space caching (Section 3.3)
                       the fast pool's last ``meta_slots`` slots host leaf
                       blocks 1:1; while leaf i is unallocated its slot backs
                       a data page; allocating the leaf force-evicts it
                       (metadata priority).
-  iRC (Section 3.4)   NonIdCache (tag -> slot) + IdCache (sector bit
-                      vectors) probed before walking the iRT; entries
-                      update in place on migration.
+  iRC (Section 3.4)   ``remap.rcache``: NonIdCache (tag -> slot) + IdCache
+                      (sector bit vectors) probed before walking the iRT;
+                      entries update in place on migration.
 
 The translated page table feeds the Pallas paged-attention kernel (the
 pools are addressed as one *unified* index space: slot < fast_slots -> fast
@@ -38,10 +45,10 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.irt_lookup.ref import irt_lookup_ref
-
-E = 64          # iRT entries per leaf block (Section 3.2)
-INVALID = -1
+from repro.core.remap import irt as irt_ops
+from repro.core.remap import rcache as rc_ops
+from repro.core.remap.irt import E, INVALID
+from repro.core.remap.rcache import RemapCacheGeometry
 
 
 @dataclasses.dataclass(frozen=True)
@@ -59,6 +66,7 @@ class TieredConfig:
     id_sets: int = 8
     id_ways: int = 16
     dtype: str = "bfloat16"
+    walk_impl: str = "auto"         # remap.irt.walk backend selection
 
     @property
     def n_logical(self) -> int:
@@ -82,6 +90,10 @@ class TieredConfig:
     def n_words(self) -> int:
         return -(-self.n_leaf // 32)
 
+    @property
+    def rc_geometry(self) -> RemapCacheGeometry:
+        return RemapCacheGeometry.from_tiered_config(self)
+
 
 class TieredState(NamedTuple):
     fast_k: jnp.ndarray          # [fast_slots, KV, page, hd]
@@ -94,7 +106,7 @@ class TieredState(NamedTuple):
     slot_owner: jnp.ndarray      # [fast_slots] int32 (inverse mapping)
     touch: jnp.ndarray           # [n_logical] int32 hotness
     fifo_ptr: jnp.ndarray        # scalar
-    # iRC
+    # iRC (state layout owned by core/remap/rcache)
     nid_tag: jnp.ndarray         # [nid_sets, nid_ways]
     nid_val: jnp.ndarray
     nid_fifo: jnp.ndarray
@@ -109,120 +121,49 @@ class TieredState(NamedTuple):
     forced_evict: jnp.ndarray
 
 
+_RC_KEYS = ("nid_tag", "nid_val", "nid_fifo", "id_tag", "id_bits", "id_fifo")
+
+
+def _rc_view(st: TieredState) -> dict:
+    return {k: getattr(st, k) for k in _RC_KEYS}
+
+
+def _irt_view(st: TieredState) -> dict:
+    return {"entries": st.leaf_table, "l1_bits": st.l1_bits,
+            "leaf_cnt": st.leaf_cnt}
+
+
+def _irt_replace(st: TieredState, tab: dict) -> TieredState:
+    return st._replace(leaf_table=tab["entries"], l1_bits=tab["l1_bits"],
+                       leaf_cnt=tab["leaf_cnt"])
+
+
 def init_state(cfg: TieredConfig) -> TieredState:
     dt = jnp.dtype(cfg.dtype)
     KV, P, hd = cfg.n_kv_heads, cfg.page_tokens, cfg.head_dim
     z = jnp.zeros
+    tab = irt_ops.init_tables(cfg.n_logical)
+    rc = rc_ops.init_state(cfg.rc_geometry)
     return TieredState(
         fast_k=z((cfg.fast_slots, KV, P, hd), dt),
         fast_v=z((cfg.fast_slots, KV, P, hd), dt),
         slow_k=z((cfg.n_logical, KV, P, hd), dt),
         slow_v=z((cfg.n_logical, KV, P, hd), dt),
-        l1_bits=z((cfg.n_words,), jnp.int32),
-        leaf_table=jnp.full((cfg.n_leaf * E,), INVALID, jnp.int32),
-        leaf_cnt=z((cfg.n_leaf,), jnp.int32),
+        l1_bits=tab["l1_bits"],
+        leaf_table=tab["entries"],
+        leaf_cnt=tab["leaf_cnt"],
         slot_owner=jnp.full((cfg.fast_slots,), INVALID, jnp.int32),
         touch=z((cfg.n_logical,), jnp.int32),
         fifo_ptr=z((), jnp.int32),
-        nid_tag=jnp.full((cfg.nid_sets, cfg.nid_ways), INVALID, jnp.int32),
-        nid_val=jnp.full((cfg.nid_sets, cfg.nid_ways), INVALID, jnp.int32),
-        nid_fifo=z((cfg.nid_sets,), jnp.int32),
-        id_tag=jnp.full((cfg.id_sets, cfg.id_ways), INVALID, jnp.int32),
-        id_bits=z((cfg.id_sets, cfg.id_ways), jnp.uint32),
-        id_fifo=z((cfg.id_sets,), jnp.int32),
         lookups=z((), jnp.int32), irc_hits=z((), jnp.int32),
         irc_id_hits=z((), jnp.int32), migrations=z((), jnp.int32),
         forced_evict=z((), jnp.int32),
+        **rc,
     )
 
 
 def logical_page(cfg: TieredConfig, seq: jnp.ndarray, j: jnp.ndarray):
     return seq * cfg.max_pages_per_seq + j
-
-
-# ---------------------------------------------------------------------------
-# iRC probe / fill (vectorised over a batch of page ids)
-# ---------------------------------------------------------------------------
-
-_HASH = 2654435761
-
-
-def _id_index(cfg, sb):
-    h = (sb.astype(jnp.uint32) * jnp.uint32(_HASH)) >> jnp.uint32(16)
-    return (h % jnp.uint32(cfg.id_sets)).astype(jnp.int32)
-
-
-def _irc_probe(cfg: TieredConfig, st: TieredState, ids):
-    """ids [N] -> (hit [N], val [N], id_hit [N])."""
-    s_n = ids % cfg.nid_sets
-    n_match = st.nid_tag[s_n] == ids[:, None]
-    nid_hit = n_match.any(-1)
-    nid_val = jnp.where(n_match, st.nid_val[s_n], 0).sum(-1)
-    sb = ids // 32
-    bit = (ids % 32).astype(jnp.uint32)
-    s_i = _id_index(cfg, sb)
-    i_match = st.id_tag[s_i] == sb[:, None]
-    line = jnp.where(i_match, st.id_bits[s_i], jnp.uint32(0)).sum(-1)
-    id_hit = i_match.any(-1) & (((line >> bit) & jnp.uint32(1)) == 1)
-    return nid_hit | id_hit, jnp.where(nid_hit, nid_val, INVALID), id_hit
-
-
-def _irc_fill(cfg: TieredConfig, st: TieredState, ids, dev, miss):
-    """Fill walked entries (batch scatter; colliding fills last-write-win,
-    an acceptable relaxation of per-access FIFO at batch granularity)."""
-    is_id = dev == INVALID
-    # NonIdCache
-    en = miss & ~is_id
-    s_n = ids % cfg.nid_sets
-    w_n = st.nid_fifo[s_n] % cfg.nid_ways
-    idx = jnp.where(en, s_n, cfg.nid_sets)        # OOB -> dropped
-    st = st._replace(
-        nid_tag=st.nid_tag.at[idx, w_n].set(ids, mode="drop"),
-        nid_val=st.nid_val.at[idx, w_n].set(dev, mode="drop"),
-        nid_fifo=st.nid_fifo.at[idx].add(1, mode="drop"))
-    # IdCache: assemble sector vectors from the leaf table ground truth
-    en_i = miss & is_id
-    sb = ids // 32
-    base = sb * 32
-    offs = base[:, None] + jnp.arange(32)[None, :]
-    offs = jnp.clip(offs, 0, st.leaf_table.shape[0] - 1)
-    sector_id = ((st.leaf_table[offs] == INVALID)
-                 .astype(jnp.uint32) << jnp.arange(32, dtype=jnp.uint32)).sum(-1)
-    s_i = _id_index(cfg, sb)
-    present = (st.id_tag[s_i] == sb[:, None]).any(-1)
-    w_i = jnp.where(present,
-                    jnp.argmax(st.id_tag[s_i] == sb[:, None], axis=-1),
-                    st.id_fifo[s_i] % cfg.id_ways)
-    idx = jnp.where(en_i, s_i, cfg.id_sets)       # OOB -> dropped
-    idx_new = jnp.where(en_i & ~present, s_i, cfg.id_sets)
-    st = st._replace(
-        id_tag=st.id_tag.at[idx, w_i].set(sb, mode="drop"),
-        id_bits=st.id_bits.at[idx, w_i].set(sector_id, mode="drop"),
-        id_fifo=st.id_fifo.at[idx_new].add(1, mode="drop"))
-    return st
-
-
-def _irc_update(cfg: TieredConfig, st: TieredState, ids, becomes_identity,
-                enable):
-    """Entry-granular consistency on iRT updates (Section 3.4): kill the
-    NonIdCache line, update the IdCache bit in place."""
-    s_n = ids % cfg.nid_sets
-    kill = (st.nid_tag[s_n] == ids[:, None]) & enable[:, None]
-    idx = jnp.where(enable & kill.any(-1), s_n, cfg.nid_sets)
-    st = st._replace(nid_tag=st.nid_tag.at[idx].set(
-        jnp.where(kill, INVALID, st.nid_tag[s_n]), mode="drop"))
-    sb = ids // 32
-    bit = (ids % 32).astype(jnp.uint32)
-    s_i = _id_index(cfg, sb)
-    present = (st.id_tag[s_i] == sb[:, None]) & enable[:, None]
-    new_bit = becomes_identity.astype(jnp.uint32)
-    line = st.id_bits[s_i]
-    upd = (line & ~(jnp.uint32(1) << bit[:, None])) \
-        | (new_bit[:, None] << bit[:, None])
-    idx = jnp.where(enable & present.any(-1), s_i, cfg.id_sets)
-    st = st._replace(id_bits=st.id_bits.at[idx].set(
-        jnp.where(present, upd, line), mode="drop"))
-    return st
 
 
 # ---------------------------------------------------------------------------
@@ -234,17 +175,20 @@ def lookup(cfg: TieredConfig, st: TieredState, page_ids):
 
     Device slots index the *unified* pool: < fast_slots -> fast pool,
     otherwise fast_slots + home (slow pool).  iRC is probed first; misses
-    walk the iRT (both levels in parallel — kernels/irt_lookup)."""
+    walk the iRT (both levels in parallel — ``remap.irt.walk``, which
+    routes large batches to the Pallas kernel)."""
     B, NP = page_ids.shape
     ids = page_ids.reshape(-1)
-    hit, val, id_hit = _irc_probe(cfg, st, ids)
+    rcg = cfg.rc_geometry
+    hit, val, id_hit = rc_ops.probe(rcg, _rc_view(st), ids)
     home = cfg.fast_slots + ids
-    walked = irt_lookup_ref(ids, jnp.full_like(ids, INVALID),
-                            st.l1_bits, st.leaf_table)
+    walked = irt_ops.walk(ids, jnp.full_like(ids, INVALID),
+                          st.l1_bits, st.leaf_table, impl=cfg.walk_impl)
     dev_walk = jnp.where(walked == INVALID, home, walked)
     dev_irc = jnp.where(id_hit, home, val)
     dev = jnp.where(hit, dev_irc, dev_walk)
-    st = _irc_fill(cfg, st, ids, walked, ~hit)
+    st = st._replace(**rc_ops.fill(rcg, _rc_view(st), ids, walked,
+                                   st.leaf_table, ~hit))
     st = st._replace(
         lookups=st.lookups + ids.shape[0],
         irc_hits=st.irc_hits + hit.sum(dtype=jnp.int32),
@@ -295,6 +239,26 @@ def _leaf_hosting_slot(cfg: TieredConfig, leaf):
     return cfg.fast_data_slots + leaf
 
 
+def _drop_entry(cfg: TieredConfig, st: TieredState, pid, enable,
+                copy_back_from=None) -> TieredState:
+    """Shared eviction tail: clear pid's iRT entry (engine op), update the
+    iRC (entry becomes identity), optionally copy the fast bytes home."""
+    pv = jnp.where(enable, pid, 0)
+    if copy_back_from is not None:
+        src = jnp.where(enable, copy_back_from, 0)
+        st = st._replace(
+            slow_k=st.slow_k.at[pv].set(
+                jnp.where(enable, st.fast_k[src], st.slow_k[pv])),
+            slow_v=st.slow_v.at[pv].set(
+                jnp.where(enable, st.fast_v[src], st.slow_v[pv])))
+    st = _irt_replace(st, irt_ops.invalidate(_irt_view(st), pv[None],
+                                             enable[None]))
+    st = st._replace(**rc_ops.invalidate(
+        cfg.rc_geometry, _rc_view(st), pv[None], enable[None],
+        becomes_identity=True))
+    return st
+
+
 def migrate_one(cfg: TieredConfig, st: TieredState, page_id, enable):
     """Migrate one hot logical page into the fast pool (FIFO victim,
     skipping allocated-metadata slots; metadata priority on leaf
@@ -324,17 +288,7 @@ def migrate_one(cfg: TieredConfig, st: TieredState, page_id, enable):
     # which append_token keeps mirrored) --------------------------------
     o = st.slot_owner[v]
     has_o = en & (o != INVALID)
-    ov = jnp.where(has_o, o, 0)
-    st = st._replace(
-        leaf_table=st.leaf_table.at[ov].set(
-            jnp.where(has_o, INVALID, st.leaf_table[ov])),
-        leaf_cnt=st.leaf_cnt.at[jnp.where(has_o, ov // E, 0)].add(
-            jnp.where(has_o, -1, 0)),
-        slow_k=st.slow_k.at[ov].set(
-            jnp.where(has_o, st.fast_k[jnp.where(en, v, 0)], st.slow_k[ov])),
-        slow_v=st.slow_v.at[ov].set(
-            jnp.where(has_o, st.fast_v[jnp.where(en, v, 0)], st.slow_v[ov])))
-    st = _irc_update(cfg, st, ov[None], jnp.array([True]), has_o[None])
+    st = _drop_entry(cfg, st, o, has_o, copy_back_from=jnp.where(en, v, 0))
 
     # --- install the page -------------------------------------------------
     vv = jnp.where(en, v, 0)
@@ -345,41 +299,27 @@ def migrate_one(cfg: TieredConfig, st: TieredState, page_id, enable):
             jnp.where(en, st.slow_v[pid], st.fast_v[vv])),
         slot_owner=st.slot_owner.at[vv].set(
             jnp.where(en, pid, st.slot_owner[vv])),
-        leaf_table=st.leaf_table.at[jnp.where(en, pid, 0)].set(
-            jnp.where(en, v, st.leaf_table[pid])),
-        leaf_cnt=st.leaf_cnt.at[jnp.where(en, my_leaf, 0)].add(
-            jnp.where(en, 1, 0)),
         migrations=st.migrations + jnp.where(en, 1, 0),
         touch=st.touch.at[pid].set(jnp.where(en, 0, st.touch[pid])))
-    # l1 bit set
-    word, bit = my_leaf // 32, (my_leaf % 32).astype(jnp.uint32)
-    newbits = st.l1_bits.at[jnp.where(en, word, 0)].set(jnp.where(
-        en, (st.l1_bits[word].astype(jnp.uint32)
-             | (jnp.uint32(1) << bit)).astype(jnp.int32), st.l1_bits[word]))
-    st = st._replace(l1_bits=newbits)
-    st = _irc_update(cfg, st, pid[None], jnp.array([False]), en[None])
+    st = _irt_replace(st, irt_ops.fill(_irt_view(st), pid[None], v[None],
+                                       en[None]))
+    st = st._replace(**rc_ops.invalidate(
+        cfg.rc_geometry, _rc_view(st), pid[None], en[None],
+        becomes_identity=False))
 
     # --- metadata priority: evict data from the newly-allocated leaf's
     # hosting slot (Section 3.3) -----------------------------------------
     h = _leaf_hosting_slot(cfg, my_leaf)
     was_free = st.leaf_cnt[my_leaf] == 1        # we allocated it just now
-    x = st.slot_owner[jnp.clip(h, 0, cfg.fast_slots - 1)]
+    hv0 = jnp.clip(h, 0, cfg.fast_slots - 1)
+    x = st.slot_owner[hv0]
     need = en & was_free & (x != INVALID) & (h < cfg.fast_slots)
-    xv = jnp.where(need, x, 0)
     hv = jnp.where(need, h, 0)
+    st = _drop_entry(cfg, st, x, need, copy_back_from=hv)
     st = st._replace(
-        leaf_table=st.leaf_table.at[xv].set(
-            jnp.where(need, INVALID, st.leaf_table[xv])),
-        leaf_cnt=st.leaf_cnt.at[jnp.where(need, xv // E, 0)].add(
-            jnp.where(need, -1, 0)),
-        slow_k=st.slow_k.at[xv].set(
-            jnp.where(need, st.fast_k[hv], st.slow_k[xv])),
-        slow_v=st.slow_v.at[xv].set(
-            jnp.where(need, st.fast_v[hv], st.slow_v[xv])),
         slot_owner=st.slot_owner.at[hv].set(
             jnp.where(need, INVALID, st.slot_owner[hv])),
         forced_evict=st.forced_evict + jnp.where(need, 1, 0))
-    st = _irc_update(cfg, st, xv[None], jnp.array([True]), need[None])
     return st
 
 

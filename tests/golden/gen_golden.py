@@ -1,0 +1,62 @@
+"""Regenerate the golden simulator counters (tests/golden/sim_counters.json).
+
+Run from the repo root:
+
+    PYTHONPATH=src python tests/golden/gen_golden.py
+
+The JSON pins ``core/simulator.run`` raw counters + metadata footprint on a
+fixed trace for every scheme the paper evaluates.  It was first generated at
+the seed commit (pre core/remap refactor); the refactor must reproduce the
+numbers bit-for-bit (tests/test_remap_engine.py::test_golden_counters).
+"""
+
+import json
+import os
+import sys
+
+import numpy as np
+
+from repro.core import (HBM3_DDR5, WORKLOADS, alloy, generate_trace, ideal,
+                        linear_cache, lohhill, mempod, relabel_first_touch,
+                        run, trimma_cache, trimma_flat)
+from repro.core.simulator import COUNTERS
+
+SMALL = dict(fast_total_blocks=512, ratio=8, n_sets=4)
+TRACE_LEN = 4096
+SEED = 0
+WL = "pr"
+
+SCHEMES = {
+    "trimma_c": lambda: trimma_cache(**SMALL),
+    "trimma_f": lambda: trimma_flat(**SMALL),
+    "linear_c": lambda: linear_cache(**SMALL),
+    "mempod": lambda: mempod(**SMALL),
+    "alloy": lambda: alloy(**{**SMALL, "n_sets": 1}),
+    "lohhill": lambda: lohhill(**{**SMALL, "n_sets": 1}),
+    "ideal_c": lambda: ideal("cache", **SMALL),
+}
+
+
+def golden_run(name):
+    cfg = SCHEMES[name]()
+    blocks, writes = generate_trace(WORKLOADS[WL], cfg.slow_blocks,
+                                    TRACE_LEN, SEED)
+    if cfg.mode == "flat":
+        blocks = relabel_first_touch(blocks)
+    out = run(cfg, HBM3_DDR5, blocks, writes)
+    rec = {c: int(out[c]) for c in COUNTERS}
+    rec["metadata_blocks"] = int(out["metadata_blocks"])
+    return rec
+
+
+def main():
+    here = os.path.dirname(os.path.abspath(__file__))
+    data = {name: golden_run(name) for name in SCHEMES}
+    path = os.path.join(here, "sim_counters.json")
+    with open(path, "w") as f:
+        json.dump(data, f, indent=1, sort_keys=True)
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

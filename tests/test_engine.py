@@ -37,3 +37,31 @@ def test_bucketing_prefers_similar_lengths():
     done = eng.run()
     order = [r.rid for r in done]
     assert order.index(2) < order.index(1), order
+
+
+def test_tiered_attend_invariant_under_serving():
+    """serve.tiered: decode attention through the Trimma-translated page
+    table equals the dense read from the homes across migration rounds."""
+    import jax.numpy as jnp
+    from repro.serve import tiered as srv
+    from repro.tiered import kvcache as tk
+
+    cfg = tk.TieredConfig(n_seqs=2, max_pages_per_seq=64, page_tokens=16,
+                          n_kv_heads=2, head_dim=32, fast_data_slots=4,
+                          migrate_threshold=2, dtype="float32")
+    key = jax.random.key(0)
+    st = tk.init_state(cfg)
+    st = st._replace(
+        slow_k=jax.random.normal(key, st.slow_k.shape, jnp.float32),
+        slow_v=jax.random.normal(jax.random.fold_in(key, 1),
+                                 st.slow_v.shape, jnp.float32))
+    q = jax.random.normal(jax.random.fold_in(key, 2),
+                          (cfg.n_seqs, cfg.n_kv_heads, 4, cfg.head_dim))
+    sl = jnp.full((cfg.n_seqs,), 128, jnp.int32)
+    out0, st = srv.attend(cfg, st, q, sl)
+    for _ in range(6):
+        st = srv.maintain(cfg, st, max_moves=3)
+        out, st = srv.attend(cfg, st, q, sl)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(out0),
+                                   rtol=1e-5, atol=1e-5)
+    assert int(st.migrations) > 0

@@ -3,7 +3,11 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis", reason="dev-only dependency "
+                    "(requirements-dev.txt); property tests need it")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import HBM3_DDR5, IDENTITY, run, trimma_cache
 from repro.core.simulator import leaf_fwd, leaf_inv, make_geometry, static_tables
