@@ -2,9 +2,9 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: verify test bench-smoke bench golden
+.PHONY: verify test bench-smoke bench golden examples-smoke
 
-verify: test bench-smoke
+verify: test bench-smoke examples-smoke
 
 test:
 	$(PY) -m pytest -x -q
@@ -12,6 +12,14 @@ test:
 bench-smoke:
 	$(PY) -m benchmarks.run --smoke
 	@test -f BENCH_smoke.json && echo "BENCH_smoke.json written"
+
+# every example on a tiny geometry (EXAMPLES_SMOKE=1), so the demos can't
+# silently rot — CI runs this too
+examples-smoke:
+	EXAMPLES_SMOKE=1 $(PY) examples/quickstart.py
+	EXAMPLES_SMOKE=1 $(PY) examples/trimma_sim_demo.py
+	EXAMPLES_SMOKE=1 $(PY) examples/policy_sweep.py
+	@echo "examples-smoke OK"
 
 bench:
 	$(PY) -m benchmarks.run --quick

@@ -7,7 +7,10 @@ flat-mode to MemPod; `quick=True` trims the workload list for CI.
 
 from __future__ import annotations
 
-from .common import WLS, geomean, scheme_config, sim, sim_sweep, write_csv
+import numpy as np
+
+from .common import (WLS, geomean, scheme_config, sim, sim_sweep, trace_for,
+                     write_csv)
 
 QUICK_WLS = ["pr", "xz", "ycsb_b", "lbm"]
 
@@ -256,5 +259,49 @@ def fig13_config(quick=False):
                   f"{lv[4]:.3f}x of 2-level); 25% Id split best or tied")
 
 
+# ---------------------------------------------------------------------------
+# Policy sweep (beyond-paper): the same Trimma geometry under the
+# core/policy presets — the policy-transparency claim, quantified
+# ---------------------------------------------------------------------------
+
+POLICY_SWEEP = ["threshold", "mea", "on_demand", "write_aware"]
+
+
+def fig_policy_sweep(quick=False, timing="hbm3+ddr5"):
+    """Sweep the hotness/migration policy axis (DESIGN.md §7) over both
+    Trimma modes: one vmapped ``run_many`` per (scheme, policy) covers all
+    workloads.  ``benchmarks/run.py --policies`` drives this."""
+    from repro.core import DDR5_NVM, HBM3_DDR5, run_many
+
+    tm = {"hbm3+ddr5": HBM3_DDR5, "ddr5+nvm": DDR5_NVM}[timing]
+    wls = _wls(quick)
+    rows = []
+    for scheme in ("trimma_c", "trimma_f"):
+        cfg = scheme_config(scheme)
+        traces = [trace_for(wl, cfg.slow_blocks, cfg.mode == "flat")
+                  for wl in wls]
+        blocks = np.stack([t[0] for t in traces])
+        writes = np.stack([t[1] for t in traces])
+        res = run_many(cfg, tm, blocks, writes, policies=POLICY_SWEEP)
+        for pname, outs in res.items():
+            for wl, o in zip(wls, outs):
+                rows.append(dict(fig="policy", scheme=scheme, policy=pname,
+                                 wl=wl, t=o["t_total"],
+                                 serve=o["serve_rate"],
+                                 moves=o["installs"] + o["swaps"],
+                                 bloat=o["bloat"]))
+    write_csv("policy_sweep.csv", rows)
+    best = {}
+    for scheme in ("trimma_c", "trimma_f"):
+        gm = {p: geomean([r["t"] for r in rows
+                          if r["scheme"] == scheme and r["policy"] == p])
+              for p in POLICY_SWEEP}
+        ref = gm["threshold"]
+        best[scheme] = min(gm, key=gm.get), ref / min(gm.values())
+    return rows, ("; ".join(f"{s}: best={b[0]} {b[1]:.2f}x vs threshold"
+                            for s, b in best.items()))
+
+
 ALL_FIGS = [fig1_associativity, fig7_overall, fig8_breakdown, fig9_metadata,
-            fig10_serve_bloat, fig11_irc, fig12_sensitivity, fig13_config]
+            fig10_serve_bloat, fig11_irc, fig12_sensitivity, fig13_config,
+            fig_policy_sweep]

@@ -6,6 +6,7 @@ detailed per-figure data lands in benchmarks/results/*.csv.
 
 Usage:
   PYTHONPATH=src python -m benchmarks.run [--quick] [--skip-sim] [--smoke]
+                                          [--policies]
 """
 
 from __future__ import annotations
@@ -21,9 +22,11 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 def smoke(out_path: str = "BENCH_smoke.json") -> str:
     """CI smoke benchmark on a tiny config: the iRT-lookup / tiered-lookup
-    microbenchmarks plus a 4-trace ``run_many`` sweep of a 512-block
-    geometry.  Writes a BENCH_*.json (the harness contract) and returns its
-    path; total runtime is well under a minute on CPU."""
+    microbenchmarks, a 4-trace ``run_many`` sweep of a 512-block geometry,
+    and the policy-axis sweep (3 non-default presets through ``run_many``
+    and the serving maintain path).  Writes a BENCH_*.json (the harness
+    contract) and returns its path; a few minutes on CPU (one scan
+    compilation per policy dominates)."""
     import jax
     import jax.numpy as jnp
     import numpy as np
@@ -72,9 +75,50 @@ def smoke(out_path: str = "BENCH_smoke.json") -> str:
     sweep = {wl: {k: v for k, v in out.items() if k != "bound"}
              for wl, out in zip(wls, outs)}
 
-    payload = {"rows": rows, "sweep": sweep,
+    # policy axis (core/policy, DESIGN.md §7): the same traces under the
+    # non-default presets, one vmapped run_many per policy, plus the
+    # serving scheduler (maintain path) under each.  The default sweep
+    # above already IS the threshold policy (the legacy-knob shim), so it
+    # seeds that entry without a second compilation.
+    from repro.core import run_many as _rm
+    from repro.core.policy import get_policy
+    from repro.serve import tiered as srv
+
+    keys = ("serve_rate", "t_total", "installs", "swaps", "rc_hit_rate")
+    pols = ["mea", "on_demand", "write_aware"]
+    t0 = time.time()
+    pol_outs = _rm(scfg, HBM3_DDR5,
+                   np.stack([t[0] for t in traces]),
+                   np.stack([t[1] for t in traces]), policies=pols)
+    pol_outs["threshold"] = outs
+    policy_sweep = {"sim": {
+        p: {wl: {k: out[k] for k in keys} for wl, out in zip(wls, po)}
+        for p, po in pol_outs.items()}}
+    serving = {}
+    for p in ["threshold"] + pols:
+        tcfg = tk.TieredConfig(n_seqs=2, max_pages_per_seq=64, page_tokens=8,
+                               n_kv_heads=1, head_dim=16, fast_data_slots=8,
+                               dtype="float32", policy=get_policy(p))
+        step = jax.jit(
+            lambda s, c=tcfg: srv.maintain(c, tk.lookup(c, s, pids)[1]))
+        ts = tk.init_state(tcfg)
+        for _ in range(6):
+            ts = step(ts)
+        serving[p] = dict(migrations=int(ts.migrations),
+                          demotions=int(ts.demotions),
+                          promo_bytes=int(ts.promo_pages) * tcfg.page_bytes,
+                          demo_bytes=int(ts.demo_pages) * tcfg.page_bytes)
+    policy_sweep["serving"] = serving
+    wall = time.time() - t0
+    rows.append(dict(
+        name="policy_sweep_4pol", us_per_call=wall * 1e6,
+        derived="+".join(f"{p}:{policy_sweep['sim'][p]['pr']['serve_rate']:.2f}"
+                         for p in ["threshold"] + pols)))
+
+    payload = {"rows": rows, "sweep": sweep, "policy_sweep": policy_sweep,
                "config": dict(fast_total_blocks=512, ratio=8, n_sets=4,
-                              trace_len=4096, workloads=wls)}
+                              trace_len=4096, workloads=wls,
+                              policies=["threshold"] + pols)}
     with open(out_path, "w") as f:
         json.dump(payload, f, indent=1, sort_keys=True)
     for row in rows:
@@ -90,6 +134,8 @@ def main() -> None:
                     help="only the kernel/tiered microbenchmarks")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny CI smoke run; writes BENCH_smoke.json")
+    ap.add_argument("--policies", action="store_true",
+                    help="sweep the core/policy presets (policy_sweep.csv)")
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
@@ -97,6 +143,13 @@ def main() -> None:
     if args.smoke:
         path = smoke()
         print(f"smoke_json,0,\"{path}\"")
+        return
+
+    if args.policies:
+        from . import figures
+        t0 = time.time()
+        _, headline = figures.fig_policy_sweep(args.quick)
+        print(f"policy_sweep,{(time.time()-t0)*1e6:.0f},\"{headline}\"")
         return
 
     from . import kernels_bench
@@ -121,6 +174,7 @@ def main() -> None:
         ("fig11_irc", lambda: figures.fig11_irc(args.quick)),
         ("fig12_sensitivity", lambda: figures.fig12_sensitivity(args.quick)),
         ("fig13_config", lambda: figures.fig13_config(args.quick)),
+        ("policy_sweep", lambda: figures.fig_policy_sweep(args.quick)),
     ]
     for name, fn in figs:
         t0 = time.time()
@@ -129,7 +183,9 @@ def main() -> None:
         print(f"{name},{us:.0f},\"{headline}\"")
         sys.stdout.flush()
 
-    # roofline summary (reads the dry-run results if present)
+    # roofline summary — only when dry-run results exist; a missing
+    # dryrun_*.jsonl is the normal case on fresh checkouts, so skip the
+    # row cleanly (a note on stderr, nothing in the CSV contract)
     try:
         from . import roofline
         rows = roofline.analyse("16x16")
@@ -140,7 +196,8 @@ def main() -> None:
                 dom[r["dominant"]] = dom.get(r["dominant"], 0) + 1
             print(f"roofline_16x16,0,\"{len(ok)} cells; dominant: {dom}\"")
     except FileNotFoundError:
-        print("roofline_16x16,0,\"run repro.launch.dryrun first\"")
+        print("note: no dry-run results; skipping roofline summary "
+              "(run repro.launch.dryrun to enable)", file=sys.stderr)
 
 
 if __name__ == "__main__":

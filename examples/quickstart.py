@@ -6,7 +6,9 @@
    KV pool for serving.
 
     PYTHONPATH=src python examples/quickstart.py
+    EXAMPLES_SMOKE=1 ...   # tiny geometry + short trace for CI
 """
+import os
 import sys
 sys.path.insert(0, "src")
 
@@ -17,10 +19,14 @@ from repro.core import (HBM3_DDR5, WORKLOADS, generate_trace, mempod,
                         relabel_first_touch, run, trimma_flat)
 from repro.tiered import kvcache as tk
 
+SMOKE = os.environ.get("EXAMPLES_SMOKE") == "1"
+GEOM = dict(fast_total_blocks=256, ratio=8, n_sets=4) if SMOKE else {}
+
 # --- 1. the simulator ------------------------------------------------------
 print("=== Trimma vs MemPod (linear remap table) on a pagerank-like trace ===")
-trimma, baseline = trimma_flat(), mempod()
-blocks, writes = generate_trace(WORKLOADS["pr"], trimma.slow_blocks, 32768)
+trimma, baseline = trimma_flat(**GEOM), mempod(**GEOM)
+blocks, writes = generate_trace(WORKLOADS["pr"], trimma.slow_blocks,
+                                4096 if SMOKE else 32768)
 blocks = relabel_first_touch(blocks)
 
 out_t = run(trimma, HBM3_DDR5, blocks, writes)

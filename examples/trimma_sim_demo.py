@@ -2,7 +2,9 @@
 Section 5 on one workload, printing each effect next to the paper's claim.
 
     PYTHONPATH=src python examples/trimma_sim_demo.py [workload]
+    EXAMPLES_SMOKE=1 ...   # tiny geometry + short trace for CI
 """
+import os
 import sys
 sys.path.insert(0, "src")
 
@@ -10,16 +12,20 @@ from repro.core import (DDR5_NVM, HBM3_DDR5, SimConfig, WORKLOADS, alloy,
                         generate_trace, relabel_first_touch, run,
                         trimma_cache, trimma_flat, mempod)
 
+SMOKE = os.environ.get("EXAMPLES_SMOKE") == "1"
+GEOM = dict(fast_total_blocks=256, ratio=8, n_sets=4) if SMOKE else {}
+
 wl = sys.argv[1] if len(sys.argv) > 1 else "xz"
 spec = WORKLOADS[wl]
 print(f"workload proxy: {wl}  (ws={spec.ws_frac:.0%} of slow tier, "
       f"zipf={spec.zipf_s}, streams={spec.stream_frac:.0%})")
 
-cfg_c = trimma_cache()
-blocks, writes = generate_trace(spec, cfg_c.slow_blocks, 49152)
+cfg_c = trimma_cache(**GEOM)
+blocks, writes = generate_trace(spec, cfg_c.slow_blocks,
+                                4096 if SMOKE else 49152)
 
 print("\n--- cache mode (vs Alloy Cache) on HBM3+DDR5 ---")
-a = run(alloy(), HBM3_DDR5, blocks, writes)
+a = run(alloy(**GEOM), HBM3_DDR5, blocks, writes)
 t = run(cfg_c, HBM3_DDR5, blocks, writes)
 print(f"  Alloy : serve={a['serve_rate']:.0%}  t={a['t_total']:.3e}")
 print(f"  Trimma: serve={t['serve_rate']:.0%}  t={t['t_total']:.3e}  "
@@ -28,8 +34,8 @@ print(f"  Trimma: serve={t['serve_rate']:.0%}  t={t['t_total']:.3e}  "
 
 print("\n--- flat mode (vs MemPod) on DDR5+NVM ---")
 fb = relabel_first_touch(blocks)
-m = run(mempod(), DDR5_NVM, fb, writes)
-f = run(trimma_flat(), DDR5_NVM, fb, writes)
+m = run(mempod(**GEOM), DDR5_NVM, fb, writes)
+f = run(trimma_flat(**GEOM), DDR5_NVM, fb, writes)
 print(f"  MemPod: meta={m['metadata_blocks']}blk rc_hit={m['rc_hit_rate']:.0%} "
       f"t={m['t_total']:.3e}")
 print(f"  Trimma: meta={f['metadata_blocks']}blk rc_hit={f['rc_hit_rate']:.0%} "

@@ -40,7 +40,9 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Literal
+from typing import Literal, Optional
+
+from .policy.config import PolicyConfig
 
 IDENTITY = -1
 
@@ -73,13 +75,19 @@ class SimConfig:
     # --- iRT shape (Section 3.2) ------------------------------------------
     irt_levels: int = 2                    # 1 == linear table fallback
 
-    # --- flat-mode migration policy ---------------------------------------
-    migrate_threshold: int = 3             # touches before hot-swap
-    counter_decay_shift: int = 14          # decay counters every 2^k accesses
-    # cache-mode selective install (0 = always-install, the DRAM-cache
-    # default used by the Alloy/Loh-Hill baselines).  Replacement/insertion
-    # policy is orthogonal to Trimma (Section 3.3) and pluggable.
-    install_threshold: int = 0
+    # --- hotness / migration policy ---------------------------------------
+    # The policy axis (trackers, deciders, scheduler — core/policy,
+    # DESIGN.md §7).  Replacement/insertion policy is orthogonal to Trimma
+    # (Section 3.3), which is why it is pluggable.  ``None`` resolves the
+    # three legacy knobs below into the default threshold-counter policy
+    # (see ``pol``); passing ``policy=`` overrides them.
+    policy: Optional[PolicyConfig] = None
+    # DEPRECATED shims (kept working; prefer ``policy=``):
+    migrate_threshold: int = 3             # -> policy.promote_threshold
+    counter_decay_shift: int = 14          # -> policy.decay_shift
+    install_threshold: int = 0             # -> policy.install_threshold
+    #   (0 = always-install, the DRAM-cache default used by the
+    #    Alloy/Loh-Hill baselines)
 
     # beyond-paper (Section 3.5 "more saving opportunities"): software
     # deallocation hints recycle iRT entries immediately — a dealloc-marked
@@ -202,10 +210,22 @@ class SimConfig:
     def n_leaf(self) -> int:
         return self.n_leaf_fwd + self.n_leaf_inv
 
+    # --- resolved policy ---------------------------------------------------
+    @property
+    def pol(self) -> PolicyConfig:
+        """The effective policy: ``policy=`` if given, else the legacy
+        threshold knobs resolved into the default PolicyConfig."""
+        if self.policy is not None:
+            return self.policy
+        return PolicyConfig(promote_threshold=self.migrate_threshold,
+                            install_threshold=self.install_threshold,
+                            decay_shift=self.counter_decay_shift)
+
     def validate(self) -> "SimConfig":
         assert self.block_bytes % self.entry_bytes == 0
         assert self.fast_total_blocks % self.n_sets == 0
         assert self.id_sector_blocks == 32, "IdCache line is one int32 lane"
+        self.pol.validate()
         _ = self.fast_data_slots  # raises on collapse
         return self
 

@@ -1,0 +1,27 @@
+"""core/policy: pluggable hotness-tracking + migration-scheduling
+(DESIGN.md §7).
+
+Three pluggable pieces over a single static ``PolicyConfig``:
+
+  trackers    batch-first hotness state (touch / mea / recency)
+  deciders    eligibility masks (threshold / topk / on_demand / write_aware)
+  scheduler   bounded promotion+demotion queues per epoch
+  access      the per-access gate the trace simulator scans over
+
+Shared by both consumers: ``core/simulator`` (``SimConfig.policy`` axis,
+``run_many(..., policies=...)`` sweeps) and ``tiered/kvcache`` /
+``serve/tiered.maintain`` (epoch scheduler with demotion + decay).
+"""
+
+from . import access, deciders, scheduler, trackers
+from .config import (DECIDERS, PRESETS, TRACKERS, PolicyConfig, get_policy,
+                     mea_policy, on_demand_policy, recency_policy,
+                     threshold_policy, topk_policy, write_aware_policy)
+from .scheduler import Plan, plan
+
+__all__ = [
+    "PolicyConfig", "get_policy", "PRESETS", "TRACKERS", "DECIDERS",
+    "threshold_policy", "mea_policy", "on_demand_policy",
+    "write_aware_policy", "topk_policy", "recency_policy",
+    "Plan", "plan", "trackers", "deciders", "scheduler", "access",
+]

@@ -1,0 +1,128 @@
+"""Per-access policy gate for the trace simulator (Layer A).
+
+``core/simulator.make_step`` calls ``gate`` once per access inside its
+``lax.scan`` step: given the access (block id, write flag) and an
+eligibility mask (cache mode: fast-tier miss; flat mode: movable
+slow-home miss), the gate updates the tracker state in-place in the
+simulator's state dict and answers "does this access trigger an
+install/migration?".
+
+The default policy (touch tracker + threshold decider, the legacy
+``install_threshold`` / ``migrate_threshold`` knobs) emits exactly the op
+sequence the pre-policy simulator inlined, so
+``tests/golden/sim_counters.json`` reproduces bit-for-bit.
+
+KEEP IN SYNC WITH ``trackers.py``: this is the per-access (batch-1,
+enable-masked) form of the same tracker semantics the batched serving
+path uses — the mea score formula, write-weight increment and per-tracker
+decay rules must match, and the default path additionally must keep the
+exact legacy op order (golden counters pin it).
+
+Epochs here are access-count based: every ``2^decay_shift`` accesses
+(``st["step"]`` is the simulator's access counter).  The ``topk`` decider
+has no per-access analogue (it needs an epoch-wide ranking) and degrades
+to the threshold gate; the epoch-ranked version runs in the serving
+scheduler (DESIGN.md §7).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .config import PolicyConfig
+
+__all__ = ["init", "gate", "forget", "tracked_keys", "masked_add",
+           "masked_set"]
+
+_STALE = -(1 << 20)
+
+
+def masked_add(arr, idx, delta, enable):
+    """Scatter-add masked by ``enable`` (disabled lanes add 0 at index 0).
+    Also the simulator's ``_madd``."""
+    idx = jnp.where(enable, idx, 0)
+    return arr.at[idx].add(jnp.where(enable, delta, 0))
+
+
+def masked_set(arr, idx, val, enable):
+    """Scatter-set masked by ``enable`` (disabled lanes rewrite index 0
+    with its current value).  Also the simulator's ``_mset``."""
+    idx = jnp.where(enable, idx, 0)
+    return arr.at[idx].set(jnp.where(enable, val, arr[idx]))
+
+
+_madd, _mset = masked_add, masked_set
+
+
+def _tracks(pol: PolicyConfig, mode: str) -> bool:
+    """Does this (policy, sim mode) pair keep per-block tracker state?"""
+    if pol.decider == "on_demand":
+        return False
+    return pol.threshold_for(mode) > 0
+
+
+def tracked_keys(pol: PolicyConfig, mode: str) -> tuple:
+    if not _tracks(pol, mode):
+        return ()
+    if pol.tracker == "mea":
+        return ("touch", "pol_ema")
+    if pol.tracker == "recency":
+        return ("touch", "pol_last")
+    return ("touch",)
+
+
+def init(pol: PolicyConfig, mode: str, n: int) -> dict:
+    """Tracker arrays to merge into the simulator state dict."""
+    out = {}
+    for key in tracked_keys(pol, mode):
+        fill = _STALE if key == "pol_last" else 0
+        out[key] = jnp.full((n,), fill, jnp.int32)
+    return out
+
+
+def gate(pol: PolicyConfig, mode: str, st: dict, b, is_write, eligible):
+    """One access: record the touch, decide, reset on a move, decay at the
+    epoch edge.  Returns ``(go, st)``."""
+    if not _tracks(pol, mode):
+        return eligible, st                    # on-demand / zero threshold
+    thr = pol.threshold_for(mode)
+    now = st["step"] >> pol.decay_shift
+
+    inc = 1 if pol.write_weight <= 1 else \
+        jnp.where(is_write, pol.write_weight, 1)
+    st["touch"] = _madd(st["touch"], b, inc, eligible)
+    if pol.tracker == "recency":
+        st["pol_last"] = _mset(st["pol_last"], b, now, eligible)
+
+    if pol.tracker == "mea":
+        sc = st["touch"][b] + (st["pol_ema"][b] >> 1)
+    else:
+        sc = st["touch"][b]
+    go = eligible & (sc >= thr)
+
+    st["touch"] = _mset(st["touch"], b, 0, go)
+    if pol.tracker == "mea":
+        st["pol_ema"] = _mset(st["pol_ema"], b, 0, go)
+
+    tick = (st["step"] & ((1 << pol.decay_shift) - 1)) == 0
+    if pol.tracker == "mea":
+        st["pol_ema"] = jnp.where(tick, st["touch"] + (st["pol_ema"] >> 1),
+                                  st["pol_ema"])
+        st["touch"] = jnp.where(tick, 0, st["touch"])
+    elif pol.tracker == "recency":
+        stale = (now - st["pol_last"]) > pol.history_len
+        st["touch"] = jnp.where(tick & stale, 0, st["touch"])
+    else:
+        st["touch"] = jnp.where(tick, st["touch"] >> 1, st["touch"])
+    return go, st
+
+
+def forget(pol: PolicyConfig, st: dict, b, enable) -> dict:
+    """Dealloc hint: drop the block's tracker state (Section 3.5 path)."""
+    if "touch" in st:
+        st["touch"] = _mset(st["touch"], b, 0, enable)
+    if "pol_ema" in st:
+        st["pol_ema"] = _mset(st["pol_ema"], b, 0, enable)
+    if "pol_last" in st:
+        st["pol_last"] = _mset(st["pol_last"], b, _STALE, enable)
+    return st

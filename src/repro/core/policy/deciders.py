@@ -1,0 +1,32 @@
+"""Deciders: which blocks *qualify* to move, given tracker scores
+(DESIGN.md §7).  Pure elementwise masks over the id space; ranking,
+budgeting and the promotion/demotion split live in ``scheduler``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .config import PolicyConfig
+
+__all__ = ["promote_mask", "demote_mask"]
+
+
+def promote_mask(pol: PolicyConfig, score, resident) -> jnp.ndarray:
+    """Non-resident blocks eligible for promotion this epoch.
+
+    Residents are always excluded: a page already in the fast tier must
+    never re-enter the promotion queue (it would burn move budget on a
+    no-op — the stale-hotness regression in tests/test_policy.py).
+    """
+    eligible = ~resident
+    if pol.decider == "on_demand":
+        return eligible & (score >= 1)           # any touch qualifies
+    if pol.decider == "topk":
+        return eligible & (score >= 1)           # scheduler ranks, caps at k
+    return eligible & (score >= pol.promote_threshold)
+
+
+def demote_mask(pol: PolicyConfig, score, resident) -> jnp.ndarray:
+    """Resident blocks whose hotness decayed to the demotion band."""
+    return resident & (score <= pol.demote_threshold)

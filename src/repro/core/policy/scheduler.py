@@ -1,0 +1,85 @@
+"""Migration scheduler: bounded moves per epoch with explicit promotion
+*and* demotion queues (DESIGN.md §7).
+
+``plan`` is a pure function from (scores, residency) to two fixed-size
+queues; the consumer applies them (the tiered KV-cache scans
+``demote_one`` / ``migrate_one`` over the lanes; counters account the
+bandwidth).  Invariants pinned by tests/test_policy.py:
+
+  * enabled promotions + enabled demotions never exceed ``max_moves``;
+  * promoted lanes are non-resident, demoted lanes are resident;
+  * enabled lanes form a prefix of each queue (hottest promotions /
+    coldest demotions first), so a shrinking budget drops the least
+    valuable moves.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import deciders
+from .config import PolicyConfig
+
+__all__ = ["Plan", "plan"]
+
+_SCORE_CAP = 1 << 20       # demotion ranking headroom (scores clip here)
+
+
+class Plan(NamedTuple):
+    promote_ids: jnp.ndarray     # [k] int32, hottest-first
+    promote_en: jnp.ndarray      # [k] bool
+    demote_ids: jnp.ndarray      # [k] int32, coldest-first
+    demote_en: jnp.ndarray       # [k] bool
+
+    @property
+    def n_promote(self):
+        return self.promote_en.sum(dtype=jnp.int32)
+
+    @property
+    def n_demote(self):
+        return self.demote_en.sum(dtype=jnp.int32)
+
+
+def plan(pol: PolicyConfig, score, resident, max_moves: int,
+         demote_key=None) -> Plan:
+    """Build this epoch's move queues.
+
+    score       [n] int32 tracker scores (higher == hotter)
+    resident    [n] bool  currently in the fast tier
+    max_moves   python int: total move budget (promotions + demotions)
+    demote_key  optional [n] int32 demotion-priority score (defaults to
+                ``score``, which callers pre-weight — e.g. the tiered
+                KV-cache folds write intensity in for write-aware
+                policies — so hotter == kept, coldest demote first)
+    """
+    n = score.shape[0]
+    k = min(int(max_moves), n)
+
+    want_p = deciders.promote_mask(pol, score, resident)
+    p_key = jnp.where(want_p, jnp.clip(score, 0, _SCORE_CAP) + 1, 0)
+    p_val, p_ids = jax.lax.top_k(p_key, k)
+    p_en = p_val > 0
+    if pol.decider == "topk":
+        p_en &= jnp.arange(k) < pol.topk
+
+    want_d = deciders.demote_mask(pol, score, resident)
+    dk = score if demote_key is None else demote_key
+    d_keyv = jnp.where(want_d, _SCORE_CAP - jnp.clip(dk, 0, _SCORE_CAP - 1),
+                       0)
+    d_val, d_ids = jax.lax.top_k(d_keyv, k)    # coldest first
+    d_en = d_val > 0
+
+    # shared budget: the preferred queue keeps its lanes, the other is
+    # truncated so the total never exceeds max_moves (prefix property of
+    # top_k keeps the best lanes)
+    lanes = jnp.arange(k)
+    if pol.demote_first:
+        p_en &= (lanes + d_en.sum(dtype=jnp.int32)) < max_moves
+    else:
+        d_en &= (lanes + p_en.sum(dtype=jnp.int32)) < max_moves
+
+    return Plan(p_ids.astype(jnp.int32), p_en,
+                d_ids.astype(jnp.int32), d_en)

@@ -1,0 +1,98 @@
+"""Hotness trackers: batch-first, pure-pytree state (DESIGN.md §7).
+
+A tracker's state is a dict of arrays over the block/page id space:
+
+  "touch"     [n] int32   base counters (every tracker keeps these)
+  "pol_ema"   [n] int32   mea only: decayed carry from previous epochs
+  "pol_last"  [n] int32   recency only: epoch the block was last seen
+
+All ops are functional (state in, state out), vectorised over a batch of
+ids, and permutation-equivariant over that batch (scatter-adds and
+same-value scatter-sets commute) — tests/test_policy.py pins this.
+
+Epoch semantics: the consumer decides what an epoch is (the simulator uses
+``2^decay_shift`` accesses, serving uses ``epoch_len`` maintain calls) and
+calls ``epoch_tick`` at the boundary; ``score`` is relative to the current
+epoch index ``now`` (only the recency tracker reads it).
+
+KEEP IN SYNC WITH ``access.py``: the simulator's per-access gate carries
+the scalar, enable-masked form of these semantics (score formulas,
+write-weight increments, decay rules).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .config import PolicyConfig
+
+__all__ = ["init", "record", "score", "epoch_tick", "forget", "KEYS"]
+
+KEYS = ("touch", "pol_ema", "pol_last")
+
+
+def init(pol: PolicyConfig, n: int) -> dict:
+    tr = {"touch": jnp.zeros((n,), jnp.int32)}
+    if pol.tracker == "mea":
+        tr["pol_ema"] = jnp.zeros((n,), jnp.int32)
+    elif pol.tracker == "recency":
+        tr["pol_last"] = jnp.full((n,), -(1 << 20), jnp.int32)
+    return tr
+
+
+def record(pol: PolicyConfig, tr: dict, ids, now=0, is_write=False) -> dict:
+    """Record one batched round of touches (``ids`` [B] int32, duplicates
+    accumulate)."""
+    w = 1
+    if pol.write_weight > 1:
+        w = jnp.where(jnp.asarray(is_write), pol.write_weight, 1)
+    tr = dict(tr)
+    tr["touch"] = tr["touch"].at[ids].add(
+        jnp.broadcast_to(jnp.asarray(w, jnp.int32), jnp.shape(ids)))
+    if pol.tracker == "recency":
+        tr["pol_last"] = tr["pol_last"].at[ids].set(
+            jnp.asarray(now, jnp.int32))
+    return tr
+
+
+def score(pol: PolicyConfig, tr: dict, now=0) -> jnp.ndarray:
+    """Current hotness score per block ([n] int32, higher == hotter)."""
+    if pol.tracker == "mea":
+        return tr["touch"] + (tr["pol_ema"] >> 1)
+    if pol.tracker == "recency":
+        recent = (jnp.asarray(now, jnp.int32) - tr["pol_last"]) \
+            <= pol.history_len
+        return jnp.where(recent, tr["touch"], 0)
+    return tr["touch"]
+
+
+def epoch_tick(pol: PolicyConfig, tr: dict, now=0, enable=True) -> dict:
+    """Decay at an epoch boundary (masked by ``enable`` so jitted callers
+    can tick conditionally)."""
+    en = jnp.asarray(enable)
+    tr = dict(tr)
+    if pol.tracker == "mea":
+        tr["pol_ema"] = jnp.where(en, tr["touch"] + (tr["pol_ema"] >> 1),
+                                  tr["pol_ema"])
+        tr["touch"] = jnp.where(en, 0, tr["touch"])
+    elif pol.tracker == "recency":
+        stale = (jnp.asarray(now, jnp.int32) - tr["pol_last"]) \
+            > pol.history_len
+        tr["touch"] = jnp.where(en & stale, 0, tr["touch"])
+    else:
+        tr["touch"] = jnp.where(en, tr["touch"] >> 1, tr["touch"])
+    return tr
+
+
+def forget(pol: PolicyConfig, tr: dict, ids, enable) -> dict:
+    """Reset a batch of blocks (post-migration / demotion / dealloc);
+    disabled lanes drop out of bounds."""
+    n = tr["touch"].shape[0]
+    idx = jnp.where(enable, ids, n)
+    tr = dict(tr)
+    tr["touch"] = tr["touch"].at[idx].set(0, mode="drop")
+    if "pol_ema" in tr:
+        tr["pol_ema"] = tr["pol_ema"].at[idx].set(0, mode="drop")
+    if "pol_last" in tr:
+        tr["pol_last"] = tr["pol_last"].at[idx].set(-(1 << 20), mode="drop")
+    return tr

@@ -18,15 +18,20 @@ geometry.  Compiled steps are cached per (config, timing).
 
 The metadata structures themselves (geometry tables, conventional + iRC
 remap caches) live in ``core/remap`` (DESIGN.md §2) — the same batch-first
-engine that backs the tiered KV-cache and the Pallas kernels.  This module
-is the *policy* loop: it drives the engine at batch size 1 inside the scan.
-``run`` simulates one trace; ``run_many`` vmaps the same jitted step over a
-stack of traces so a benchmark sweep compiles once per geometry and runs
-every workload in parallel.
+engine that backs the tiered KV-cache and the Pallas kernels.  Hotness
+tracking and migration gating live in ``core/policy`` (DESIGN.md §7): the
+step calls ``policy.access.gate`` per access, so ``SimConfig.policy``
+selects the scheme (threshold / MEA-epoch / on-demand / write-aware …).
+This module is the access loop: it drives both at batch size 1 inside the
+scan.  ``run`` simulates one trace; ``run_many`` vmaps the same jitted
+step over a stack of traces (and optionally a list of policies) so a
+benchmark sweep compiles once per (geometry, policy) and runs every
+workload in parallel.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 
 import jax
@@ -34,6 +39,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from .config import IDENTITY, SimConfig
+from .policy import access as pol_access
+from .policy.config import PolicyConfig, get_policy
 from .remap import rcache as rc_ops
 from .remap.geometry import (E, Geometry, home_block, home_slot, leaf_fwd,
                              leaf_inv, make_geometry, static_tables)
@@ -71,16 +78,14 @@ def init_state(cfg: SimConfig, g: Geometry) -> dict:
     }
     if cfg.mode == "flat":
         # data slots start occupied by their home blocks (identity);
-        # hotness counters drive the migration policy
+        # the policy's hotness tracker drives migration
         tab = static_tables(g)
         owner = np.where(
             ~tab["slot_is_meta"],
             ((tab["slot_u"] << g.log_sets) | tab["slot_set"]).astype(np.int32),
             -1)
         st["slot_owner"] = jnp.asarray(owner, jnp.int32)
-        st["touch"] = jnp.zeros((cfg.n_phys,), jnp.int32)
-    elif cfg.install_threshold > 0:
-        st["touch"] = jnp.zeros((cfg.n_phys,), jnp.int32)
+    st.update(pol_access.init(cfg.pol, cfg.mode, cfg.n_phys))
     st.update(rc_ops.init_state(RemapCacheGeometry.from_sim_config(cfg)))
     for c in COUNTERS:
         st[c] = jnp.zeros((), jnp.int32)
@@ -88,17 +93,10 @@ def init_state(cfg: SimConfig, g: Geometry) -> dict:
 
 
 # ---------------------------------------------------------------------------
-# shared masked-update helpers
+# shared masked-update helpers (one definition, in core/policy/access)
 # ---------------------------------------------------------------------------
 
-def _madd(arr, idx, delta, enable):
-    idx = jnp.where(enable, idx, 0)
-    return arr.at[idx].add(jnp.where(enable, delta, 0))
-
-
-def _mset(arr, idx, val, enable):
-    idx = jnp.where(enable, idx, 0)
-    return arr.at[idx].set(jnp.where(enable, val, arr[idx]))
+_madd, _mset = pol_access.masked_add, pol_access.masked_set
 
 
 def _bump(st, name, delta):
@@ -281,8 +279,7 @@ def make_step(cfg: SimConfig, timing: TimingModel):
                 st["leaf_cnt"] = _madd(st["leaf_cnt"], li_of(slot0), -1,
                                        freed & is_meta0)
             st = rc_invalidate(st, b, clearable, becomes_identity=True)
-            if "touch" in st:
-                st["touch"] = _mset(st["touch"], b, 0, dealloc)
+            st = pol_access.forget(cfg.pol, st, b, dealloc)
             _bump(st, "deallocs", jnp.where(dealloc, 1, 0))
             is_write = is_write & ~dealloc
             skip = dealloc
@@ -328,32 +325,25 @@ def make_step(cfg: SimConfig, timing: TimingModel):
         st["slot_dirty"] = _mset(st["slot_dirty"], jnp.maximum(m, 0), True,
                                  is_write & (m >= 0))
 
-        # 3. fill / migrate on a fast-tier miss
+        # 3. fill / migrate on a fast-tier miss, gated by the policy
+        # (core/policy/access: tracker update + decider; the default
+        # threshold policy reproduces the pre-policy op sequence exactly)
         miss = ~in_fast & ~skip
         if cfg.mode == "cache":
-            do_install = miss
-            if cfg.install_threshold > 0:
-                st["touch"] = _madd(st["touch"], b, 1, miss)
-                do_install = miss & (st["touch"][b] >= cfg.install_threshold)
-                st["touch"] = _mset(st["touch"], b, 0, do_install)
-                decay = (st["step"]
-                         & ((1 << cfg.counter_decay_shift) - 1)) == 0
-                st["touch"] = jnp.where(decay, st["touch"] >> 1, st["touch"])
+            do_install, st = pol_access.gate(cfg.pol, "cache", st, b,
+                                             is_write, miss)
             v, pos = pick_victim(st, b, s)
             st = commit_fifo(st, s, pos, do_install)
             st = install_copy(st, b, v, is_write, do_install)
         else:
             movable = miss & (b >= g.fast_home_blocks)   # displaced fast-home
-            st["touch"] = _madd(st["touch"], b, 1, movable)  # blocks stay put
-            hot = movable & (st["touch"][b] >= cfg.migrate_threshold)
+            hot, st = pol_access.gate(cfg.pol, "flat", st, b,   # blocks stay
+                                      is_write, movable)        # put
             v, pos = pick_victim(st, b, s)
             st = commit_fifo(st, s, pos, hot)
             v_is_meta = tab["slot_is_meta"][v]
             st = install_copy(st, b, v, is_write, hot & v_is_meta)
             st = install_swap(st, b, v, hot & ~v_is_meta)
-            st["touch"] = _mset(st["touch"], b, 0, hot)
-            decay = (st["step"] & ((1 << cfg.counter_decay_shift) - 1)) == 0
-            st["touch"] = jnp.where(decay, st["touch"] >> 1, st["touch"])
         return st, None
 
     return step, g
@@ -488,7 +478,8 @@ def run(cfg: SimConfig, timing: TimingModel, blocks: np.ndarray,
 
 def run_many(cfg: SimConfig, timing: TimingModel, blocks: np.ndarray,
              writes: np.ndarray,
-             deallocs: np.ndarray | None = None) -> list[dict]:
+             deallocs: np.ndarray | None = None,
+             policies: list | None = None) -> list[dict] | dict:
     """Vectorised sweep: simulate T same-length traces in one jitted vmap.
 
     ``blocks``/``writes``/``deallocs`` are [T, L] stacks (e.g. several
@@ -498,7 +489,24 @@ def run_many(cfg: SimConfig, timing: TimingModel, blocks: np.ndarray,
     ``run`` would produce for that trace alone (``_state`` is omitted — the
     per-trace states are interleaved in device memory; use ``run`` when the
     end state matters).
+
+    ``policies`` sweeps the policy axis the same way the trace stack sweeps
+    workloads: a list of ``PolicyConfig``s or preset names (core/policy
+    ``PRESETS``); the result becomes ``{policy_name: [per-trace dicts]}``.
+    Each policy is its own compiled specialisation (the gate changes the
+    traced computation), cached per config like any other geometry.
     """
+    if policies is not None:
+        out = {}
+        for p in policies:
+            pc = get_policy(p) if not isinstance(p, PolicyConfig) else p
+            assert pc.name not in out, (
+                f"duplicate policy name {pc.name!r} in sweep — results are "
+                "keyed by PolicyConfig.name; give variants distinct names "
+                "(dataclasses.replace(pol, name=...))")
+            pcfg = dataclasses.replace(cfg, policy=pc)
+            out[pc.name] = run_many(pcfg, timing, blocks, writes, deallocs)
+        return out
     blocks = np.asarray(blocks)
     writes = np.asarray(writes)
     assert blocks.ndim == 2, "run_many expects [n_traces, trace_len]"

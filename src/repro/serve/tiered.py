@@ -38,7 +38,11 @@ def attend(cfg: tk.TieredConfig, st: tk.TieredState, q, seq_lens,
 
 
 def maintain(cfg: tk.TieredConfig, st: tk.TieredState,
-             max_moves: int = 4) -> tk.TieredState:
-    """Between decode steps: promote the hottest pages into the fast pool
-    (bounded work per call keeps the migration off the critical path)."""
-    return tk.migrate_hot(cfg, st, max_moves=max_moves)
+             max_moves: int | None = None) -> tk.TieredState:
+    """Between decode steps: one policy-scheduler pass (core/policy,
+    DESIGN.md §7) — bounded promotion *and* demotion queues plus epoch
+    decay of the hotness tracker, so the work per call stays off the
+    critical path and stale-hot pages eventually return to the slow pool.
+    ``cfg.policy`` selects the scheme; ``max_moves`` (default: the
+    policy's budget) caps promotions + demotions per call."""
+    return tk.run_scheduler(cfg, st, max_moves=max_moves)

@@ -29,6 +29,12 @@ runs at batch size 1):
                       (sector bit vectors) probed before walking the iRT;
                       entries update in place on migration.
 
+Hotness tracking and migration scheduling are NOT implemented here: they
+are ``core/policy`` (DESIGN.md §7).  ``lookup``/``append_token`` record
+touches through the policy's tracker, and ``run_scheduler`` (the
+``serve/tiered.maintain`` body) plans bounded promotion + demotion queues
+per epoch — ``TieredConfig.policy`` selects the scheme.
+
 The translated page table feeds the Pallas paged-attention kernel (the
 pools are addressed as one *unified* index space: slot < fast_slots -> fast
 pool, else slow home) — on real hardware the two pools live in different
@@ -40,11 +46,14 @@ All state is a pure pytree; every op is jit-able and returns a new state.
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.policy import scheduler as pol_sched
+from repro.core.policy import trackers as pol_track
+from repro.core.policy.config import PolicyConfig
 from repro.core.remap import irt as irt_ops
 from repro.core.remap import rcache as rc_ops
 from repro.core.remap.irt import E, INVALID
@@ -59,7 +68,11 @@ class TieredConfig:
     n_kv_heads: int
     head_dim: int
     fast_data_slots: int            # HBM data-area pages
-    migrate_threshold: int = 2
+    # hotness / migration policy (core/policy, DESIGN.md §7); ``None``
+    # resolves the DEPRECATED ``migrate_threshold`` shim into the default
+    # threshold policy (see ``pol``)
+    policy: Optional[PolicyConfig] = None
+    migrate_threshold: int = 2      # DEPRECATED -> policy.promote_threshold
     # iRC geometry (scaled Table 1)
     nid_sets: int = 32
     nid_ways: int = 6
@@ -94,6 +107,20 @@ class TieredConfig:
     def rc_geometry(self) -> RemapCacheGeometry:
         return RemapCacheGeometry.from_tiered_config(self)
 
+    @property
+    def pol(self) -> PolicyConfig:
+        """Effective policy: ``policy=`` if given, else the legacy
+        ``migrate_threshold`` knob resolved into the default."""
+        if self.policy is not None:
+            return self.policy
+        return PolicyConfig(promote_threshold=self.migrate_threshold)
+
+    @property
+    def page_bytes(self) -> int:
+        """Bytes one K+V page moves across tiers (bandwidth accounting)."""
+        return (2 * self.n_kv_heads * self.page_tokens * self.head_dim
+                * jnp.dtype(self.dtype).itemsize)
+
 
 class TieredState(NamedTuple):
     fast_k: jnp.ndarray          # [fast_slots, KV, page, hd]
@@ -104,7 +131,11 @@ class TieredState(NamedTuple):
     leaf_table: jnp.ndarray      # [n_leaf*E] int32 (page -> fast slot)
     leaf_cnt: jnp.ndarray        # [n_leaf] int32
     slot_owner: jnp.ndarray      # [fast_slots] int32 (inverse mapping)
-    touch: jnp.ndarray           # [n_logical] int32 hotness
+    touch: jnp.ndarray           # [n_logical] int32 hotness (tracker base)
+    ema: jnp.ndarray             # [n_logical] int32 (mea tracker carry)
+    last_seen: jnp.ndarray       # [n_logical] int32 (recency tracker)
+    wtouch: jnp.ndarray          # [n_logical] int32 write intensity
+    epoch: jnp.ndarray           # scalar: maintain() calls so far
     fifo_ptr: jnp.ndarray        # scalar
     # iRC (state layout owned by core/remap/rcache)
     nid_tag: jnp.ndarray         # [nid_sets, nid_ways]
@@ -118,14 +149,40 @@ class TieredState(NamedTuple):
     irc_hits: jnp.ndarray
     irc_id_hits: jnp.ndarray
     migrations: jnp.ndarray
+    demotions: jnp.ndarray
     forced_evict: jnp.ndarray
+    promo_pages: jnp.ndarray     # pages promoted (installs); bytes =
+    demo_pages: jnp.ndarray      # count * cfg.page_bytes at read-out;
+                                 # demo_pages counts ALL fast->slow
+                                 # copy-backs (int32-safe page counts)
 
 
 _RC_KEYS = ("nid_tag", "nid_val", "nid_fifo", "id_tag", "id_bits", "id_fifo")
 
+# tracker-state field <-> core/policy/trackers key (DESIGN.md §7)
+_TR_FIELDS = {"touch": "touch", "pol_ema": "ema", "pol_last": "last_seen"}
+
 
 def _rc_view(st: TieredState) -> dict:
     return {k: getattr(st, k) for k in _RC_KEYS}
+
+
+def _tr_view(cfg: TieredConfig, st: TieredState) -> dict:
+    tr = {"touch": st.touch}
+    if cfg.pol.tracker == "mea":
+        tr["pol_ema"] = st.ema
+    elif cfg.pol.tracker == "recency":
+        tr["pol_last"] = st.last_seen
+    return tr
+
+
+def _tr_replace(st: TieredState, tr: dict) -> TieredState:
+    return st._replace(**{_TR_FIELDS[k]: v for k, v in tr.items()})
+
+
+def _now(cfg: TieredConfig, st: TieredState):
+    """Current epoch index (``epoch_len`` maintain calls per epoch)."""
+    return st.epoch // cfg.pol.epoch_len
 
 
 def _irt_view(st: TieredState) -> dict:
@@ -154,10 +211,15 @@ def init_state(cfg: TieredConfig) -> TieredState:
         leaf_cnt=tab["leaf_cnt"],
         slot_owner=jnp.full((cfg.fast_slots,), INVALID, jnp.int32),
         touch=z((cfg.n_logical,), jnp.int32),
+        ema=z((cfg.n_logical,), jnp.int32),
+        last_seen=jnp.full((cfg.n_logical,), -(1 << 20), jnp.int32),
+        wtouch=z((cfg.n_logical,), jnp.int32),
+        epoch=z((), jnp.int32),
         fifo_ptr=z((), jnp.int32),
         lookups=z((), jnp.int32), irc_hits=z((), jnp.int32),
         irc_id_hits=z((), jnp.int32), migrations=z((), jnp.int32),
-        forced_evict=z((), jnp.int32),
+        demotions=z((), jnp.int32), forced_evict=z((), jnp.int32),
+        promo_pages=z((), jnp.int32), demo_pages=z((), jnp.int32),
         **rc,
     )
 
@@ -189,11 +251,12 @@ def lookup(cfg: TieredConfig, st: TieredState, page_ids):
     dev = jnp.where(hit, dev_irc, dev_walk)
     st = st._replace(**rc_ops.fill(rcg, _rc_view(st), ids, walked,
                                    st.leaf_table, ~hit))
+    st = _tr_replace(st, pol_track.record(cfg.pol, _tr_view(cfg, st), ids,
+                                          now=_now(cfg, st)))
     st = st._replace(
         lookups=st.lookups + ids.shape[0],
         irc_hits=st.irc_hits + hit.sum(dtype=jnp.int32),
-        irc_id_hits=st.irc_id_hits + id_hit.sum(dtype=jnp.int32),
-        touch=st.touch.at[ids].add(1))
+        irc_id_hits=st.irc_id_hits + id_hit.sum(dtype=jnp.int32))
     return dev.reshape(B, NP), st
 
 
@@ -229,7 +292,14 @@ def append_token(cfg: TieredConfig, st: TieredState, seq_ids, k, v, pos):
         fast_k=st.fast_k.at[fast_idx, :, off].set(k.astype(dt), mode="drop"),
         fast_v=st.fast_v.at[fast_idx, :, off].set(v.astype(dt), mode="drop"),
         slow_k=st.slow_k.at[slow_idx, :, off].set(k.astype(dt), mode="drop"),
-        slow_v=st.slow_v.at[slow_idx, :, off].set(v.astype(dt), mode="drop"))
+        slow_v=st.slow_v.at[slow_idx, :, off].set(v.astype(dt), mode="drop"),
+        wtouch=st.wtouch.at[ids].add(1))
+    if cfg.pol.write_weight > 1:        # write-aware: appends heat pages up
+        # base weight only: the extra (write_weight-1) per write comes from
+        # wtouch at scoring time (run_scheduler), matching the simulator's
+        # R + write_weight*W accumulation without double counting
+        st = _tr_replace(st, pol_track.record(
+            cfg.pol, _tr_view(cfg, st), ids, now=_now(cfg, st)))
     return st
 
 
@@ -250,7 +320,10 @@ def _drop_entry(cfg: TieredConfig, st: TieredState, pid, enable,
             slow_k=st.slow_k.at[pv].set(
                 jnp.where(enable, st.fast_k[src], st.slow_k[pv])),
             slow_v=st.slow_v.at[pv].set(
-                jnp.where(enable, st.fast_v[src], st.slow_v[pv])))
+                jnp.where(enable, st.fast_v[src], st.slow_v[pv])),
+            # every fast->slow copy-back is migration bandwidth, whether a
+            # scheduler demotion, a FIFO victim or a forced metadata evict
+            demo_pages=st.demo_pages + jnp.where(enable, 1, 0))
     st = _irt_replace(st, irt_ops.invalidate(_irt_view(st), pv[None],
                                              enable[None]))
     st = st._replace(**rc_ops.invalidate(
@@ -278,9 +351,16 @@ def migrate_one(cfg: TieredConfig, st: TieredState, page_id, enable):
     # cannot evict the slot that will host this page's own leaf
     my_leaf = pid // E
     leaf_ok &= order != _leaf_hosting_slot(cfg, my_leaf)
-    pos = jnp.argmax(leaf_ok)
+    # prefer an admissible *empty* slot (e.g. one a demotion just freed in
+    # this maintain pass) — only fall back to evicting a resident, and
+    # only then advance the FIFO hand, so demote-first actually frees
+    # slots for the promotions that follow
+    empty_ok = leaf_ok & (st.slot_owner[order] == INVALID)
+    has_empty = empty_ok.any()
+    pos = jnp.where(has_empty, jnp.argmax(empty_ok), jnp.argmax(leaf_ok))
     v = order[pos]
-    st = st._replace(fifo_ptr=jnp.where(en, (st.fifo_ptr + pos + 1) % K,
+    st = st._replace(fifo_ptr=jnp.where(en & ~has_empty,
+                                        (st.fifo_ptr + pos + 1) % K,
                                         st.fifo_ptr))
 
     # --- evict current occupant (slow-swap: copy back is a no-op, homes
@@ -300,7 +380,7 @@ def migrate_one(cfg: TieredConfig, st: TieredState, page_id, enable):
         slot_owner=st.slot_owner.at[vv].set(
             jnp.where(en, pid, st.slot_owner[vv])),
         migrations=st.migrations + jnp.where(en, 1, 0),
-        touch=st.touch.at[pid].set(jnp.where(en, 0, st.touch[pid])))
+        promo_pages=st.promo_pages + jnp.where(en, 1, 0))
     st = _irt_replace(st, irt_ops.fill(_irt_view(st), pid[None], v[None],
                                        en[None]))
     st = st._replace(**rc_ops.invalidate(
@@ -323,19 +403,85 @@ def migrate_one(cfg: TieredConfig, st: TieredState, page_id, enable):
     return st
 
 
-def migrate_hot(cfg: TieredConfig, st: TieredState, max_moves: int = 4):
-    """Off-critical-path migration: promote up to ``max_moves`` hottest
-    pages over the threshold (Figure 3's step 3)."""
-    hot = jnp.where(st.touch >= cfg.migrate_threshold,
-                    st.touch, -1)
-    top_vals, top_ids = jax.lax.top_k(hot, max_moves)
-
-    def body(st, args):
-        val, pid = args
-        return migrate_one(cfg, st, pid, val > 0), None
-
-    st, _ = jax.lax.scan(body, st, (top_vals, top_ids))
+def demote_one(cfg: TieredConfig, st: TieredState, page_id, enable):
+    """Demote one resident page back to its slow home: copy the fast bytes
+    home, clear the iRT entry (engine op) + slot, reset its hotness.  All
+    updates masked by ``enable``; non-resident pages are a no-op."""
+    pid = jnp.where(enable, page_id, 0)
+    entry = st.leaf_table[pid]
+    en = enable & (entry != INVALID)
+    slot = jnp.where(en, entry, 0)
+    st = _drop_entry(cfg, st, pid, en, copy_back_from=slot)
+    st = st._replace(
+        slot_owner=st.slot_owner.at[slot].set(
+            jnp.where(en, INVALID, st.slot_owner[slot])),
+        demotions=st.demotions + jnp.where(en, 1, 0))
     return st
+
+
+def run_scheduler(cfg: TieredConfig, st: TieredState,
+                  max_moves: int | None = None) -> TieredState:
+    """One off-critical-path maintenance pass (Figure 3's step 3), driven
+    by ``core/policy`` (DESIGN.md §7):
+
+      1. score every logical page with the policy's tracker;
+      2. ``scheduler.plan``: bounded promotion + demotion queues
+         (residents never re-enter the promotion queue; write-aware
+         policies demote first and keep write-hot residents);
+      3. apply demotions, then promotions (bandwidth is accounted at the
+         copy sites: ``promo_pages`` per promotion install, ``demo_pages``
+         per fast->slow copy-back — scheduler demotions AND victim/forced
+         evictions; multiply by ``cfg.page_bytes`` at read-out so the
+         int32 state counter can't overflow at realistic page sizes);
+      4. advance the epoch; at each ``epoch_len`` boundary the tracker
+         decays, so an untouched page eventually becomes demotable (the
+         stale-hotness fix — tests/test_policy.py pins it).
+    """
+    pol = cfg.pol
+    mm = pol.max_moves if max_moves is None else int(max_moves)
+    n = cfg.n_logical
+    now = _now(cfg, st)
+    tr = _tr_view(cfg, st)
+    sc = pol_track.score(pol, tr, now=now)[:n]
+    if pol.decider == "write_aware":
+        # one write-weighted score for gate AND demote ranking: touch holds
+        # R + W (base weight), wtouch holds W, so this is R + write_weight*W
+        # — the same accumulation the simulator gate makes per access
+        sc = sc + (pol.write_weight - 1) * st.wtouch[:n]
+    resident = st.leaf_table[:n] != INVALID
+    p = pol_sched.plan(pol, sc, resident, mm)
+
+    def dbody(s, args):
+        pid, en = args
+        return demote_one(cfg, s, pid, en), None
+
+    st, _ = jax.lax.scan(dbody, st, (p.demote_ids, p.demote_en))
+
+    def pbody(s, args):
+        pid, en = args
+        return migrate_one(cfg, s, pid, en), None
+
+    st, _ = jax.lax.scan(pbody, st, (p.promote_ids, p.promote_en))
+
+    # demoted pages restart cold (write intensity included); promoted
+    # pages keep their score so the demotion band can't reclaim them
+    # before at least one decay epoch
+    tr = _tr_view(cfg, st)
+    tr = pol_track.forget(pol, tr, p.demote_ids, p.demote_en)
+    tick = ((st.epoch + 1) % pol.epoch_len) == 0
+    tr = pol_track.epoch_tick(pol, tr, now=now, enable=tick)
+    st = _tr_replace(st, tr)
+    didx = jnp.where(p.demote_en, p.demote_ids, n)
+    wtouch = st.wtouch.at[didx].set(0, mode="drop")
+    return st._replace(
+        epoch=st.epoch + 1,
+        wtouch=jnp.where(tick, wtouch >> 1, wtouch))
+
+
+def migrate_hot(cfg: TieredConfig, st: TieredState, max_moves: int = 4):
+    """DEPRECATED shim: the inlined top-k promotion pass is now the policy
+    scheduler (``run_scheduler``), which adds demotion + epoch decay."""
+    return run_scheduler(cfg, st, max_moves=max_moves)
 
 
 def metadata_pages(cfg: TieredConfig, st: TieredState) -> jnp.ndarray:

@@ -1,0 +1,375 @@
+"""core/policy: the pluggable hotness-tracking + migration-scheduling
+subsystem (DESIGN.md §7).
+
+Four layers:
+  1. scheduler/tracker invariants, hypothesis-driven where available
+     (never exceed max_moves; promotion+demotion conserve slot ownership;
+     trackers are permutation-equivariant over the batch);
+  2. the default policy is bit-identical to the legacy threshold knobs
+     (the golden counters themselves are pinned by test_remap_engine);
+  3. non-default presets (MEA-epoch, on-demand, write-aware-demote) run
+     through both ``run_many(policies=...)`` and the serving ``maintain``
+     path, with attention invariance holding under every policy;
+  4. the stale-hotness regression: a page untouched for N epochs becomes
+     demotable, and a resident page never re-enters the promotion queue.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (HBM3_DDR5, WORKLOADS, generate_trace,
+                        relabel_first_touch, run, run_many, trimma_cache,
+                        trimma_flat)
+from repro.core.config import SimConfig
+from repro.core.policy import (PRESETS, PolicyConfig, get_policy,
+                               mea_policy, on_demand_policy, scheduler,
+                               threshold_policy, trackers,
+                               write_aware_policy)
+from repro.serve import tiered as srv
+from repro.tiered import kvcache as tk
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as hst
+    HAVE_HYP = True
+except ImportError:                      # dev-only dep (requirements-dev.txt)
+    HAVE_HYP = False
+
+SMALL = dict(fast_total_blocks=256, ratio=8, n_sets=4)
+SWEEP = ["mea", "on_demand", "write_aware"]      # the non-default presets
+
+
+def _tiered_cfg(policy=None, **kw):
+    base = dict(n_seqs=2, max_pages_per_seq=64, page_tokens=16, n_kv_heads=2,
+                head_dim=32, fast_data_slots=4, migrate_threshold=2,
+                dtype="float32")
+    base.update(kw)
+    return tk.TieredConfig(policy=policy, **base)
+
+
+def _filled(cfg, key):
+    st = tk.init_state(cfg)
+    return st._replace(
+        slow_k=jax.random.normal(key, st.slow_k.shape, jnp.float32),
+        slow_v=jax.random.normal(jax.random.fold_in(key, 1),
+                                 st.slow_v.shape, jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# 1a. scheduler invariants
+# ---------------------------------------------------------------------------
+
+def _check_plan(pol, score, resident, max_moves):
+    p = scheduler.plan(pol, jnp.asarray(score, jnp.int32),
+                       jnp.asarray(resident), max_moves)
+    pe = np.asarray(p.promote_en)
+    de = np.asarray(p.demote_en)
+    pi = np.asarray(p.promote_ids)
+    di = np.asarray(p.demote_ids)
+    # bounded work: never more than the budget, promotions+demotions joint
+    assert pe.sum() + de.sum() <= max_moves
+    # promoted lanes are non-resident, demoted lanes resident
+    assert not resident[pi[pe]].any()
+    assert resident[di[de]].all()
+    # no duplicates across enabled lanes
+    moved = np.concatenate([pi[pe], di[de]])
+    assert len(np.unique(moved)) == len(moved)
+    # enabled lanes form a prefix (hottest/coldest first)
+    for en in (pe, de):
+        if en.any():
+            assert en[:en.sum()].all()
+    return p
+
+
+@pytest.mark.parametrize("preset", list(PRESETS))
+def test_plan_bounded_and_partitioned(preset):
+    rng = np.random.default_rng(0)
+    pol = get_policy(preset)
+    for max_moves in (1, 3, 8):
+        score = rng.integers(0, 6, 64)
+        resident = rng.random(64) < 0.3
+        _check_plan(pol, score, resident, max_moves)
+
+
+def test_plan_demote_first_budget():
+    """Write-aware: demotions keep the budget, promotions get the rest."""
+    pol = write_aware_policy(demote_threshold=0)
+    score = np.zeros(16, np.int32)
+    score[:8] = 5                       # 8 hot non-residents
+    resident = np.zeros(16, bool)
+    resident[8:] = True                 # 8 cold residents (score 0)
+    p = _check_plan(pol, score, resident, 4)
+    assert int(p.n_demote) == 4 and int(p.n_promote) == 0
+
+
+if HAVE_HYP:
+    @settings(max_examples=30, deadline=None)
+    @given(hst.data())
+    def test_plan_invariants_random(data):
+        n = data.draw(hst.integers(2, 48))
+        score = np.array(data.draw(hst.lists(
+            hst.integers(0, 9), min_size=n, max_size=n)), np.int32)
+        resident = np.array(data.draw(hst.lists(
+            hst.booleans(), min_size=n, max_size=n)))
+        preset = data.draw(hst.sampled_from(list(PRESETS)))
+        max_moves = data.draw(hst.integers(1, 12))
+        _check_plan(get_policy(preset), score, resident, max_moves)
+
+
+# ---------------------------------------------------------------------------
+# 1b. trackers are permutation-equivariant over the batch
+# ---------------------------------------------------------------------------
+
+def _tracker_pol(kind):
+    return {"touch": threshold_policy, "mea": mea_policy,
+            "recency": lambda: get_policy("recency")}[kind]()
+
+
+@pytest.mark.parametrize("kind", ["touch", "mea", "recency"])
+def test_tracker_permutation_equivariant(kind):
+    rng = np.random.default_rng(1)
+    pol = _tracker_pol(kind)
+    n = 64
+    ids = jnp.asarray(rng.integers(0, n, 48), jnp.int32)
+    perm = jnp.asarray(rng.permutation(48))
+    a = trackers.record(pol, trackers.init(pol, n), ids, now=3)
+    b = trackers.record(pol, trackers.init(pol, n), ids[perm], now=3)
+    for k in a:
+        np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]), k)
+    np.testing.assert_array_equal(
+        np.asarray(trackers.score(pol, a, now=3)),
+        np.asarray(trackers.score(pol, b, now=3)))
+
+
+if HAVE_HYP:
+    @settings(max_examples=25, deadline=None)
+    @given(hst.data())
+    def test_tracker_equivariance_random(data):
+        kind = data.draw(hst.sampled_from(["touch", "mea", "recency"]))
+        pol = _tracker_pol(kind)
+        n = data.draw(hst.integers(4, 64))
+        ids = np.array(data.draw(hst.lists(
+            hst.integers(0, n - 1), min_size=1, max_size=64)), np.int32)
+        perm = np.array(data.draw(hst.permutations(range(len(ids)))))
+        a = trackers.record(pol, trackers.init(pol, n), jnp.asarray(ids))
+        b = trackers.record(pol, trackers.init(pol, n),
+                            jnp.asarray(ids[perm]))
+        for k in a:
+            np.testing.assert_array_equal(np.asarray(a[k]),
+                                          np.asarray(b[k]), k)
+
+
+# ---------------------------------------------------------------------------
+# 1c. promotion + demotion conserve slot ownership (serving churn)
+# ---------------------------------------------------------------------------
+
+def _check_ownership(cfg, st):
+    n = cfg.n_logical
+    lt = np.asarray(st.leaf_table)[:n]
+    owner = np.asarray(st.slot_owner)
+    for pid in np.nonzero(lt != tk.INVALID)[0]:
+        assert owner[lt[pid]] == pid
+    for slot in np.nonzero(owner != tk.INVALID)[0]:
+        assert lt[owner[slot]] == slot
+    # every fast slot has at most one owner; counts match the table
+    occupied = (owner != tk.INVALID).sum()
+    assert occupied == (lt != tk.INVALID).sum()
+    cnt = np.zeros(cfg.n_leaf, np.int32)
+    np.add.at(cnt, np.nonzero(lt != tk.INVALID)[0] // tk.E, 1)
+    np.testing.assert_array_equal(cnt, np.asarray(st.leaf_cnt))
+
+
+@pytest.mark.parametrize("preset", ["threshold"] + SWEEP)
+def test_scheduler_churn_conserves_ownership(preset):
+    pol = get_policy(preset, epoch_len=2, promote_threshold=2)
+    cfg = _tiered_cfg(policy=pol, page_tokens=8, head_dim=16, n_kv_heads=1)
+    st = _filled(cfg, jax.random.key(2))
+    key = jax.random.key(3)
+    for step in range(12):
+        # concentrated traffic so every gate (incl. threshold=2 under
+        # 2-round epochs) sees hot pages
+        pages = jax.random.randint(jax.random.fold_in(key, step),
+                                   (cfg.n_seqs, 4), 0, 12)
+        ids = tk.logical_page(cfg, jnp.arange(cfg.n_seqs)[:, None], pages)
+        _, st = tk.lookup(cfg, st, ids)
+        st = srv.maintain(cfg, st, max_moves=3)
+        _check_ownership(cfg, st)
+    assert int(st.migrations) > 0
+
+
+if HAVE_HYP:
+    @settings(max_examples=5, deadline=None)
+    @given(hst.data())
+    def test_scheduler_churn_random(data):
+        preset = data.draw(hst.sampled_from(["threshold"] + SWEEP))
+        pol = get_policy(preset, epoch_len=data.draw(hst.integers(1, 3)))
+        cfg = _tiered_cfg(policy=pol, page_tokens=8, head_dim=16,
+                          n_kv_heads=1, max_pages_per_seq=32)
+        st = _filled(cfg, jax.random.key(4))
+        rounds = data.draw(hst.lists(hst.lists(
+            hst.integers(0, 31), min_size=1, max_size=6),
+            min_size=1, max_size=8))
+        for pages in rounds:
+            ids = tk.logical_page(
+                cfg, jnp.zeros((1, 1), jnp.int32),
+                jnp.asarray(pages, jnp.int32)[None, :])
+            _, st = tk.lookup(cfg, st, ids)
+            st = srv.maintain(cfg, st, max_moves=2)
+        _check_ownership(cfg, st)
+
+
+# ---------------------------------------------------------------------------
+# 2. default policy == legacy knobs, and the deprecation shims
+# ---------------------------------------------------------------------------
+
+def test_default_policy_matches_legacy_run():
+    """policies=['threshold'] through run_many equals the legacy default
+    ``run`` counter-for-counter (the golden file pins the absolute
+    values; this pins the policy plumbing)."""
+    cfg = trimma_cache(**SMALL)
+    blocks, writes = generate_trace(WORKLOADS["pr"], cfg.slow_blocks,
+                                    4096, 0)
+    base = run(cfg, HBM3_DDR5, blocks, writes)
+    swept = run_many(cfg, HBM3_DDR5, blocks[None], writes[None],
+                     policies=["threshold"])
+    assert set(swept) == {"threshold"}
+    for k in ("n_acc", "serve_fast", "installs", "rc_hit", "by_fast",
+              "cyc_slow", "walks"):
+        assert swept["threshold"][0][k] == base[k], k
+
+
+def test_deprecated_knob_shims():
+    # SimConfig: legacy knobs resolve into the default policy
+    cfg = SimConfig(install_threshold=2, migrate_threshold=5,
+                    counter_decay_shift=9)
+    assert cfg.pol.install_threshold == 2
+    assert cfg.pol.promote_threshold == 5
+    assert cfg.pol.decay_shift == 9
+    # an explicit policy= wins over the legacy knobs
+    cfg2 = SimConfig(install_threshold=2, policy=on_demand_policy())
+    assert cfg2.pol.decider == "on_demand"
+    # TieredConfig: same surface
+    t = _tiered_cfg(migrate_threshold=7)
+    assert t.pol.promote_threshold == 7
+    t2 = _tiered_cfg(policy=mea_policy())
+    assert t2.pol.tracker == "mea"
+
+
+def test_flat_default_policy_matches_legacy_run():
+    cfg = trimma_flat(**SMALL)
+    blocks, writes = generate_trace(WORKLOADS["ycsb_a"], cfg.slow_blocks,
+                                    4096, 0)
+    blocks = relabel_first_touch(blocks)
+    base = run(cfg, HBM3_DDR5, blocks, writes)
+    explicit = run(dataclasses.replace(cfg, policy=threshold_policy()),
+                   HBM3_DDR5, blocks, writes)
+    for k in ("serve_fast", "swaps", "installs", "by_slow_wr"):
+        assert base[k] == explicit[k], k
+
+
+# ---------------------------------------------------------------------------
+# 3. the sweepable family: run_many + serving, invariance under every policy
+# ---------------------------------------------------------------------------
+
+def test_policy_presets_through_run_many():
+    cfg = trimma_flat(**SMALL)
+    traces = [generate_trace(WORKLOADS[w], cfg.slow_blocks, 2048, 0)
+              for w in ("pr", "ycsb_a")]
+    blocks = np.stack([relabel_first_touch(t[0]) for t in traces])
+    writes = np.stack([t[1] for t in traces])
+    res = run_many(cfg, HBM3_DDR5, blocks, writes,
+                   policies=["threshold"] + SWEEP)
+    assert set(res) == {"threshold", *SWEEP}
+    for name, outs in res.items():
+        assert len(outs) == 2
+        for o in outs:
+            assert o["n_acc"] == 2048
+            assert 0 <= o["serve_rate"] <= 1
+    # the axis is live: on-demand migrates far more than the threshold gate
+    assert res["on_demand"][0]["swaps"] > res["threshold"][0]["swaps"]
+
+
+@pytest.mark.parametrize("preset", ["threshold"] + SWEEP)
+def test_attend_invariant_under_policy(preset):
+    """The attention output must be independent of the policy driving the
+    migrations — translation stays invisible to the math under every
+    tracker/decider/scheduler combination."""
+    pol = get_policy(preset, epoch_len=2)
+    cfg = _tiered_cfg(policy=pol)
+    key = jax.random.key(0)
+    st = _filled(cfg, key)
+    q = jax.random.normal(jax.random.fold_in(key, 2),
+                          (cfg.n_seqs, cfg.n_kv_heads, 4, cfg.head_dim))
+    sl = jnp.full((cfg.n_seqs,), 128, jnp.int32)
+    out0, st = srv.attend(cfg, st, q, sl)
+    moved = 0
+    for _ in range(8):
+        st = srv.maintain(cfg, st, max_moves=3)
+        out, st = srv.attend(cfg, st, q, sl)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(out0),
+                                   rtol=1e-5, atol=1e-5)
+    moved = int(st.migrations) + int(st.demotions)
+    assert moved > 0
+    # moves are accounted at the copy sites: every promotion is one
+    # install; copy-backs cover scheduler demotions plus victim/forced
+    # evictions (so demo_pages can exceed the demotions counter)
+    assert int(st.promo_pages) == int(st.migrations)
+    assert int(st.demo_pages) >= int(st.demotions)
+
+
+def test_write_aware_heats_written_pages():
+    """Under the write-aware policy, append_token traffic alone qualifies
+    a page for promotion (reads never touched it)."""
+    pol = write_aware_policy(promote_threshold=4, epoch_len=100)
+    cfg = _tiered_cfg(policy=pol, page_tokens=8, head_dim=16, n_kv_heads=1)
+    st = tk.init_state(cfg)
+    k = jnp.ones((cfg.n_seqs, cfg.n_kv_heads, cfg.head_dim))
+    for pos in range(4):                     # 2 writes x weight 2 = 4
+        st = tk.append_token(cfg, st, jnp.arange(cfg.n_seqs), k, k, pos=pos)
+    assert int(st.touch[0]) >= pol.promote_threshold
+    assert int(st.wtouch[0]) == 4
+    st = srv.maintain(cfg, st)
+    assert int(st.leaf_table[0]) != tk.INVALID   # page 0 promoted
+
+
+# ---------------------------------------------------------------------------
+# 4. stale-hotness regression (the bug this subsystem fixes)
+# ---------------------------------------------------------------------------
+
+def test_stale_page_decays_demotes_and_never_repromotes():
+    """Pre-policy, ``TieredState.touch`` never decayed except on migration,
+    so one early burst kept a page hot (and in the top-k queue) forever.
+    Now: a page untouched for N epochs becomes demotable, and a page
+    already resident never re-enters the promotion queue."""
+    pol = threshold_policy(promote_threshold=2, epoch_len=1, max_moves=4)
+    cfg = _tiered_cfg(policy=pol, page_tokens=8, head_dim=16, n_kv_heads=1)
+    st = tk.init_state(cfg)
+    st = st._replace(touch=st.touch.at[:3].set(5))   # one early burst
+    st = srv.maintain(cfg, st)
+    assert int(st.migrations) == 3
+    resident = np.asarray(st.leaf_table)[:cfg.n_logical] != tk.INVALID
+    assert list(np.nonzero(resident)[0]) == [0, 1, 2]
+
+    # while resident (and still scoring hot), the promotion queue must
+    # exclude them — the plan spends zero lanes on residents
+    sc = trackers.score(pol, {"touch": st.touch}, now=0)
+    p = scheduler.plan(pol, sc[:cfg.n_logical],
+                       jnp.asarray(resident), pol.max_moves)
+    assert not np.isin(np.asarray(p.promote_ids)[np.asarray(p.promote_en)],
+                       [0, 1, 2]).any()
+
+    # untouched for N epochs -> decay to zero -> demoted back home
+    for _ in range(6):
+        st = srv.maintain(cfg, st)
+    assert int(st.demotions) == 3
+    assert (np.asarray(st.leaf_table)[:cfg.n_logical] == tk.INVALID).all()
+    # and never re-promoted along the way (counters were forgotten)
+    assert int(st.migrations) == 3
+    # a fresh touch burst re-qualifies it: demotion is not a ban
+    _, st = tk.lookup(cfg, st, jnp.zeros((1, 4), jnp.int32))
+    st = srv.maintain(cfg, st)
+    assert int(st.migrations) > 3
