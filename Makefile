@@ -2,16 +2,24 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: verify test bench-smoke bench golden examples-smoke
+.PHONY: verify test bench-smoke bench-serve bench golden examples-smoke
 
 verify: test bench-smoke examples-smoke
 
 test:
 	$(PY) -m pytest -x -q
 
+# --smoke includes the serve_decode decode-step microbenchmark; check_bench
+# gates on the cached zero-copy path beating the legacy concat baseline
 bench-smoke:
 	$(PY) -m benchmarks.run --smoke
 	@test -f BENCH_smoke.json && echo "BENCH_smoke.json written"
+	$(PY) -m benchmarks.check_bench BENCH_smoke.json
+
+# serve decode microbenchmark only (merges into BENCH_smoke.json)
+bench-serve:
+	$(PY) -m benchmarks.run --serve
+	$(PY) -m benchmarks.check_bench BENCH_smoke.json
 
 # every example on a tiny geometry (EXAMPLES_SMOKE=1), so the demos can't
 # silently rot — CI runs this too
@@ -19,6 +27,7 @@ examples-smoke:
 	EXAMPLES_SMOKE=1 $(PY) examples/quickstart.py
 	EXAMPLES_SMOKE=1 $(PY) examples/trimma_sim_demo.py
 	EXAMPLES_SMOKE=1 $(PY) examples/policy_sweep.py
+	EXAMPLES_SMOKE=1 $(PY) examples/serve_tiered.py
 	@echo "examples-smoke OK"
 
 bench:

@@ -1,0 +1,47 @@
+"""CI gate over BENCH_smoke.json's ``serve_decode`` section.
+
+The zero-copy PR's contract: the cached split-pool decode path must beat
+the legacy concat path *it was measured alongside* (same run, same
+machine) on both steps/s and metadata-path translated pages per step.
+Exits non-zero — failing the build — if the section is missing or the
+cached path has regressed behind its own baseline.
+
+Usage: PYTHONPATH=src python -m benchmarks.check_bench [BENCH_smoke.json]
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+
+def check(path: str = "BENCH_smoke.json") -> int:
+    try:
+        with open(path) as f:
+            payload = json.load(f)
+    except OSError as e:
+        print(f"check_bench: cannot read {path}: {e}", file=sys.stderr)
+        return 1
+    sd = payload.get("serve_decode")
+    if not sd:
+        print(f"check_bench: no serve_decode section in {path} "
+              "(run benchmarks.run --smoke or --serve first)",
+              file=sys.stderr)
+        return 1
+    legacy = sd["legacy_concat_uncached"]
+    cached = sd["zero_copy_cached"]
+    speed_ok = cached["us_per_step"] < legacy["us_per_step"]
+    pages_ok = (cached["translated_pages_per_step"]
+                < legacy["translated_pages_per_step"])
+    print(f"serve_decode: cached {cached['us_per_step']:.1f}us/step vs "
+          f"concat {legacy['us_per_step']:.1f}us/step "
+          f"({sd['speedup_cached_vs_concat']:.2f}x) "
+          f"[{'OK' if speed_ok else 'REGRESSED'}]")
+    print(f"serve_decode: cached {cached['translated_pages_per_step']:.2f} "
+          f"vs concat {legacy['translated_pages_per_step']:.2f} "
+          f"translated pages/step [{'OK' if pages_ok else 'REGRESSED'}]")
+    return 0 if (speed_ok and pages_ok) else 1
+
+
+if __name__ == "__main__":
+    sys.exit(check(sys.argv[1] if len(sys.argv) > 1 else "BENCH_smoke.json"))

@@ -27,7 +27,8 @@ def _timeit(fn, *args, iters=20):
 def bench() -> list[dict]:
     from repro.kernels.flash_attention.ops import flash_attention_op
     from repro.kernels.irt_lookup.ops import irt_lookup_op
-    from repro.kernels.paged_attention.ops import paged_attention_op
+    from repro.kernels.paged_attention.ops import (paged_attention_op,
+                                                   paged_attention_split_op)
     from repro.tiered import kvcache as tk
 
     rows = []
@@ -50,6 +51,16 @@ def bench() -> list[dict]:
     sl = jnp.full((B,), npages * page, jnp.int32)
     us = _timeit(lambda: paged_attention_op(qd, kp, vp, pt, sl), iters=20)
     rows.append(dict(name="paged_attention_ref", us_per_call=us,
+                     derived=f"{B*npages*page/us:.1f}tok·pos/us"))
+
+    # split-pool variant (the zero-copy decode read): same table — it
+    # already speaks the unified index space — but the pools stay
+    # separate operands, fast tier 1/8 of the slots here
+    fs = nslots // 8
+    kf, vf, ks, vs = kp[:fs], vp[:fs], kp[fs:], vp[fs:]
+    us = _timeit(lambda: paged_attention_split_op(qd, kf, vf, ks, vs,
+                                                  pt, sl), iters=20)
+    rows.append(dict(name="paged_attention_split_ref", us_per_call=us,
                      derived=f"{B*npages*page/us:.1f}tok·pos/us"))
 
     n_leaf, N = 256, 8192

@@ -42,9 +42,12 @@ print(f"  speedup         : {out_b['t_total']/out_t['t_total']:.2f}x")
 
 # --- 2. the tiered KV cache -------------------------------------------------
 print("\n=== TieredKVCache: Trimma metadata managing a two-tier KV pool ===")
+# cache_device_table=False: this demo shows the iRC hit accounting of
+# the raw metadata path — with the (default) cached device table, repeat
+# lookups never reach the iRC at all (see examples/serve_tiered.py)
 cfg = tk.TieredConfig(n_seqs=4, max_pages_per_seq=64, page_tokens=16,
                       n_kv_heads=2, head_dim=64, fast_data_slots=16,
-                      dtype="float32")
+                      dtype="float32", cache_device_table=False)
 st = tk.init_state(cfg)
 key = jax.random.key(0)
 st = st._replace(slow_k=jax.random.normal(key, st.slow_k.shape),

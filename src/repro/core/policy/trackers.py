@@ -40,18 +40,25 @@ def init(pol: PolicyConfig, n: int) -> dict:
     return tr
 
 
-def record(pol: PolicyConfig, tr: dict, ids, now=0, is_write=False) -> dict:
+def record(pol: PolicyConfig, tr: dict, ids, now=0, is_write=False,
+           enable=None) -> dict:
     """Record one batched round of touches (``ids`` [B] int32, duplicates
-    accumulate)."""
+    accumulate).  ``enable`` [B] bool masks lanes out (disabled lanes add
+    weight 0 / drop out of bounds) — the serving path uses it to heat only
+    the pages under ``seq_lens``."""
     w = 1
     if pol.write_weight > 1:
         w = jnp.where(jnp.asarray(is_write), pol.write_weight, 1)
+    w = jnp.broadcast_to(jnp.asarray(w, jnp.int32), jnp.shape(ids))
+    if enable is not None:
+        w = jnp.where(enable, w, 0)
     tr = dict(tr)
-    tr["touch"] = tr["touch"].at[ids].add(
-        jnp.broadcast_to(jnp.asarray(w, jnp.int32), jnp.shape(ids)))
+    tr["touch"] = tr["touch"].at[ids].add(w)
     if pol.tracker == "recency":
-        tr["pol_last"] = tr["pol_last"].at[ids].set(
-            jnp.asarray(now, jnp.int32))
+        idx = ids if enable is None else jnp.where(
+            enable, ids, tr["pol_last"].shape[0])
+        tr["pol_last"] = tr["pol_last"].at[idx].set(
+            jnp.asarray(now, jnp.int32), mode="drop")
     return tr
 
 

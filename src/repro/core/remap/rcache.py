@@ -269,3 +269,40 @@ def invalidate(g: RemapCacheGeometry, st, ids: jnp.ndarray,
     rows, cols = _cells(s_i, present, g.id_sets, g.id_ways)
     out["id_bits"] = st["id_bits"].at[rows, cols].set(upd, mode="drop")
     return out
+
+
+def invalidate_range(g: RemapCacheGeometry, st, lo, hi,
+                     becomes_identity=True) -> dict:
+    """Row-ranged invalidate: make every cached mapping for ids in
+    ``[lo, hi)`` consistent with a bulk table reset (a sequence's page rows
+    released back to identity on lane recycle, or any epoch-style bulk
+    remap undo).  ``lo``/``hi`` may be traced scalars.
+
+    One dense pass over the cache arrays instead of ``hi - lo`` per-id
+    probes: NonIdCache (and conventional) entries whose tag falls in the
+    range die; IdCache lines covering the range have the in-range bits set
+    to the new identity value in place, preserving the line's coverage of
+    its out-of-range blocks (same entry-granularity rule as
+    ``invalidate``).
+    """
+    if g.kind in ("ideal", "none"):
+        return {}
+    lo = jnp.asarray(lo, jnp.int32)
+    hi = jnp.asarray(hi, jnp.int32)
+    if g.kind == "conventional":
+        tag = st["rc_tag"]
+        return {"rc_tag": jnp.where((tag >= lo) & (tag < hi), -1, tag)}
+    out = {}
+    tag = st["nid_tag"]
+    out["nid_tag"] = jnp.where((tag >= lo) & (tag < hi), -1, tag)
+    sb = st["id_tag"]                                          # [S, W]
+    base = sb[..., None] * g.sector + jnp.arange(g.sector,
+                                                 dtype=jnp.int32)
+    inr = (sb[..., None] >= 0) & (base >= lo) & (base < hi)    # [S, W, 32]
+    mask = (inr.astype(jnp.uint32)
+            << jnp.arange(g.sector, dtype=jnp.uint32)).sum(
+        -1, dtype=jnp.uint32)
+    bits = st["id_bits"]
+    out["id_bits"] = jnp.where(
+        jnp.asarray(becomes_identity, jnp.bool_), bits | mask, bits & ~mask)
+    return out

@@ -1,4 +1,4 @@
-"""jit'd public wrapper for paged decode attention."""
+"""jit'd public wrappers for paged decode attention (unified + split-pool)."""
 
 from __future__ import annotations
 
@@ -6,8 +6,8 @@ import functools
 
 import jax
 
-from .paged_attention import paged_attention
-from .ref import paged_attention_ref
+from .paged_attention import paged_attention, paged_attention_split
+from .ref import paged_attention_ref, paged_attention_split_ref
 
 
 def _on_tpu() -> bool:
@@ -21,3 +21,18 @@ def paged_attention_op(q, k_pool, v_pool, page_table, seq_lens,
         return paged_attention_ref(q, k_pool, v_pool, page_table, seq_lens)
     return paged_attention(q, k_pool, v_pool, page_table, seq_lens,
                            interpret=not _on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def paged_attention_split_op(q, fast_k, fast_v, slow_k, slow_v, page_table,
+                             seq_lens, *, impl: str = "auto"):
+    """The zero-copy decode read: fast and slow pools stay separate operands
+    (different memory kinds at deployment) and each page is routed by
+    ``slot < fast_slots``.  Bit-identical to ``paged_attention_op`` over the
+    concatenated pools."""
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        return paged_attention_split_ref(q, fast_k, fast_v, slow_k, slow_v,
+                                         page_table, seq_lens)
+    return paged_attention_split(q, fast_k, fast_v, slow_k, slow_v,
+                                 page_table, seq_lens,
+                                 interpret=not _on_tpu())

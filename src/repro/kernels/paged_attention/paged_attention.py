@@ -9,6 +9,24 @@ paper's "every access must translate physical->device" fused directly into
 the data access, and the TPU analogue of its parallel fixed-location lookup
 (Section 3.2): the index map *is* the lookup.
 
+Two variants share the online-softmax body:
+
+``paged_attention``        one unified pool (slot indexes the concat of
+                           fast|slow) — the legacy path, which forces the
+                           caller to materialise that concat;
+``paged_attention_split``  the zero-copy path: fast and slow pools are
+                           separate operands and the scalar-prefetch index
+                           maps route each page by ``slot < fast_slots``
+                           (fast pool) vs ``slot - fast_slots`` (slow
+                           home).  Nothing is concatenated; on deployment
+                           hardware the two operands live in different
+                           memory kinds (HBM vs host/CXL) and each page's
+                           DMA is issued against its own tier.  Both tiles
+                           are prefetched per step (the unused one is
+                           clamped to slot 0) and the body selects by the
+                           routing bit — one page of spare bandwidth per
+                           step in exchange for never copying the pools.
+
 Grid: (B, KV, n_pages), pages sequential for the online softmax.
 VMEM working set per step: one (page, hd) K tile + V tile + [G, hd]
 accumulator — hardware-aligned for page=128, hd=128.
@@ -26,10 +44,9 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _kernel(page_table, seq_lens,          # scalar prefetch
-            q_ref, kp_ref, vp_ref, o_ref,
-            acc_ref, m_ref, l_ref, *,
-            scale: float, page: int, npages: int):
+def _softmax_step(q_ref, k, v, seq_lens, o_ref, acc_ref, m_ref, l_ref, *,
+                  scale: float, page: int, npages: int):
+    """One online-softmax update with this page's [page, hd] K/V tiles."""
     b = pl.program_id(0)
     j = pl.program_id(2)
 
@@ -40,7 +57,6 @@ def _kernel(page_table, seq_lens,          # scalar prefetch
         l_ref[...] = jnp.zeros_like(l_ref)
 
     q = q_ref[0, 0].astype(jnp.float32)            # [G, hd]
-    k = kp_ref[0, 0].astype(jnp.float32)           # [page, hd]
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32) * scale
 
@@ -54,7 +70,7 @@ def _kernel(page_table, seq_lens,          # scalar prefetch
     corr = jnp.exp(m_prev - m_new)
     l_ref[...] = l_ref[...] * corr + p.sum(axis=1, keepdims=True)
     acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
-        p, vp_ref[0, 0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+        p, v, (((1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32)
     m_ref[...] = m_new
 
@@ -62,6 +78,30 @@ def _kernel(page_table, seq_lens,          # scalar prefetch
     def _finish():
         o_ref[0, 0] = (acc_ref[...]
                        / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def _kernel(page_table, seq_lens,          # scalar prefetch
+            q_ref, kp_ref, vp_ref, o_ref,
+            acc_ref, m_ref, l_ref, *,
+            scale: float, page: int, npages: int):
+    _softmax_step(q_ref, kp_ref[0, 0].astype(jnp.float32),
+                  vp_ref[0, 0].astype(jnp.float32), seq_lens,
+                  o_ref, acc_ref, m_ref, l_ref,
+                  scale=scale, page=page, npages=npages)
+
+
+def _split_kernel(page_table, seq_lens,    # scalar prefetch
+                  q_ref, kf_ref, vf_ref, ks_ref, vs_ref, o_ref,
+                  acc_ref, m_ref, l_ref, *,
+                  scale: float, page: int, npages: int, fast_slots: int):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    # the routing bit: which tier this page's DMA actually targeted
+    is_fast = page_table[b, j] < fast_slots
+    k = jnp.where(is_fast, kf_ref[0, 0], ks_ref[0, 0]).astype(jnp.float32)
+    v = jnp.where(is_fast, vf_ref[0, 0], vs_ref[0, 0]).astype(jnp.float32)
+    _softmax_step(q_ref, k, v, seq_lens, o_ref, acc_ref, m_ref, l_ref,
+                  scale=scale, page=page, npages=npages)
 
 
 def paged_attention(q, k_pool, v_pool, page_table, seq_lens, *,
@@ -104,3 +144,56 @@ def paged_attention(q, k_pool, v_pool, page_table, seq_lens, *,
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(page_table, seq_lens, q, k_pool, v_pool)
+
+
+def paged_attention_split(q, fast_k, fast_v, slow_k, slow_v, page_table,
+                          seq_lens, *, interpret: bool = False):
+    """Zero-copy variant: q [B,KV,G,hd]; fast pools [fast_slots,KV,page,hd];
+    slow pools [n_homes,KV,page,hd]; page_table [B,npages] int32 in the
+    *unified* index space (< fast_slots -> fast, else fast_slots + home);
+    seq_lens [B] int32.  Returns [B,KV,G,hd], bit-identical to
+    ``paged_attention`` over the concatenated pools."""
+    B, KV, G, hd = q.shape
+    fast_slots, _, page, _ = fast_k.shape
+    npages = page_table.shape[1]
+    scale = 1.0 / (hd ** 0.5)
+
+    kernel = functools.partial(_split_kernel, scale=scale, page=page,
+                               npages=npages, fast_slots=fast_slots)
+
+    def _fast_idx(b, h, j, pt, sl):
+        return (jnp.where(pt[b, j] < fast_slots, pt[b, j], 0), h, 0, 0)
+
+    def _slow_idx(b, h, j, pt, sl):
+        return (jnp.where(pt[b, j] < fast_slots, 0,
+                          pt[b, j] - fast_slots), h, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, KV, npages),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd),
+                         lambda b, h, j, pt, sl: (b, h, 0, 0)),
+            # per-tier pointer chase: the slot routes its own tier's DMA,
+            # the other tier's fetch is clamped to slot 0 and discarded
+            pl.BlockSpec((1, 1, page, hd), _fast_idx),
+            pl.BlockSpec((1, 1, page, hd), _fast_idx),
+            pl.BlockSpec((1, 1, page, hd), _slow_idx),
+            pl.BlockSpec((1, 1, page, hd), _slow_idx),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd),
+                               lambda b, h, j, pt, sl: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, hd), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(page_table, seq_lens, q, fast_k, fast_v, slow_k, slow_v)

@@ -1,4 +1,12 @@
-"""Pure-jnp oracle for paged decode attention."""
+"""Pure-jnp oracles for paged decode attention.
+
+Two gather front-ends share one attention tail, so the unified-pool and
+split-pool paths are bit-identical by construction: the split oracle
+selects each page's bytes from the fast or slow pool (slot < fast_slots
+routes fast, else ``slot - fast_slots`` indexes the slow homes) and the
+values it feeds the softmax are exactly the values the unified concat
+would have gathered.
+"""
 
 from __future__ import annotations
 
@@ -8,21 +16,61 @@ import jax.numpy as jnp
 NEG_INF = -1e30
 
 
-def paged_attention_ref(q, k_pool, v_pool, page_table, seq_lens):
-    """q [B,KV,G,hd]; pools [n_slots,KV,page,hd]; page_table [B,npages];
-    seq_lens [B] -> [B,KV,G,hd]."""
-    B, KV, G, hd = q.shape
-    page = k_pool.shape[2]
-    npages = page_table.shape[1]
-    # gather pages -> [B, KV, npages*page, hd]
-    k = k_pool[page_table]                      # [B,npages,KV,page,hd]
-    v = v_pool[page_table]
-    k = k.transpose(0, 2, 1, 3, 4).reshape(B, KV, npages * page, hd)
-    v = v.transpose(0, 2, 1, 3, 4).reshape(B, KV, npages * page, hd)
+def _attend_pages(q, k, v, seq_lens):
+    """q [B,KV,G,hd]; gathered k/v [B,KV,T,hd]; seq_lens [B]."""
+    hd = q.shape[-1]
     s = jnp.einsum("bkgh,bkth->bkgt", q.astype(jnp.float32),
                    k.astype(jnp.float32)) / (hd ** 0.5)
-    pos = jnp.arange(npages * page)[None, None, None, :]
+    pos = jnp.arange(k.shape[2])[None, None, None, :]
     s = jnp.where(pos < seq_lens[:, None, None, None], s, NEG_INF)
     w = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("bkgt,bkth->bkgh", w,
                       v.astype(jnp.float32)).astype(q.dtype)
+
+
+def _flatten_pages(x):
+    """[B,npages,KV,page,hd] -> [B,KV,npages*page,hd]."""
+    B, npages, KV, page, hd = x.shape
+    return x.transpose(0, 2, 1, 3, 4).reshape(B, KV, npages * page, hd)
+
+
+def paged_attention_ref(q, k_pool, v_pool, page_table, seq_lens):
+    """q [B,KV,G,hd]; pools [n_slots,KV,page,hd]; page_table [B,npages];
+    seq_lens [B] -> [B,KV,G,hd]."""
+    B, npages = page_table.shape
+    flat = page_table.reshape(-1)
+    # jnp.take hits XLA:CPU's fast whole-slice gather path; fancy
+    # indexing with a 2D index lowers to a much slower general gather
+    k = jnp.take(k_pool, flat, axis=0).reshape(B, npages, *k_pool.shape[1:])
+    v = jnp.take(v_pool, flat, axis=0).reshape(B, npages, *v_pool.shape[1:])
+    return _attend_pages(q, _flatten_pages(k), _flatten_pages(v), seq_lens)
+
+
+def paged_attention_split_ref(q, fast_k, fast_v, slow_k, slow_v,
+                              page_table, seq_lens):
+    """Split-pool oracle: the page table still speaks the unified index
+    space (slot < fast_slots -> fast pool, else ``slot - fast_slots`` is
+    the slow home) but the gather reads the two pools in place — no
+    concatenated copy is ever materialised.  This is also the op's CPU
+    backend; gather wall time vs the unified path is shape-dependent on
+    XLA:CPU (the zero-copy speedup the benchmark gates on comes from the
+    concat removal *plus* the cached device table) — the structural win,
+    per-tier operands that map onto separate memory kinds, is the TPU
+    kernel's."""
+    B, npages = page_table.shape
+    fast_slots = fast_k.shape[0]
+    flat = page_table.reshape(-1)
+    is_fast = flat < fast_slots
+    fidx = jnp.where(is_fast, flat, 0)
+    sidx = jnp.where(is_fast, 0, flat - fast_slots)
+    sel = is_fast[:, None, None, None]
+
+    def pick(fast, slow):
+        x = jnp.where(sel, jnp.take(fast, fidx, axis=0),
+                      jnp.take(slow, sidx, axis=0))
+        return _flatten_pages(x.reshape(B, npages, *x.shape[1:]))
+
+    return _attend_pages(q, pick(fast_k, slow_k), pick(fast_v, slow_v),
+                         seq_lens)
+
+

@@ -64,6 +64,40 @@ def make_decode_fn(cfg: ArchConfig):
     return fn
 
 
+def make_tiered_decode_step(tcfg, *, path: str = "zero_copy",
+                            impl: str = "auto"):
+    """Build one jitted serving decode step against the tiered KV store:
+    append this step's per-sequence K/V token, then read attention through
+    the Trimma-translated device table.
+
+    ``path`` selects the data path (both produce bit-identical output —
+    the golden-equality test pins it):
+      "zero_copy"  cached device table + split-pool kernel — pool bytes
+                   never move (the production path);
+      "concat"     the legacy baseline: full re-translation + unified-pool
+                   concatenation per step (kept for the ``serve_decode``
+                   benchmark; pair with ``cache_device_table=False``).
+
+    Returned signature: step(state, q, k_new, v_new, pos) -> (out, state)
+    with q [B, KV, G, hd], k_new/v_new [B, KV, hd] and ``pos`` the shared
+    decode position (seq_lens becomes pos + 1).
+    """
+    import jax.numpy as jnp
+
+    from repro.serve import tiered as srv
+    from repro.tiered import kvcache as tk
+
+    seq_ids = jnp.arange(tcfg.n_seqs, dtype=jnp.int32)
+    fn = srv.attend if path == "zero_copy" else srv.attend_concat
+
+    def step(st, q, k_new, v_new, pos):
+        st = tk.append_token(tcfg, st, seq_ids, k_new, v_new, pos)
+        seq_lens = jnp.full((tcfg.n_seqs,), pos + 1, jnp.int32)
+        return fn(tcfg, st, q, seq_lens, impl=impl)
+
+    return jax.jit(step)
+
+
 def make_prefill_fn(cfg: ArchConfig, shape: ShapeConfig):
     if cfg.is_encoder:
         def fn(params, batch):          # encode: logits over frames

@@ -6,10 +6,14 @@ Production concerns covered here:
   * straggler mitigation: requests are bucketed by remaining length so one
     long sequence cannot pin the whole batch (the scheduler prefers filling
     a lane with a request whose target length matches the batch's bucket);
-  * tiered KV serving demo: a single-attention-layer path wired through
-    TieredKVCache + the paged-attention kernel (the full-model decode path
-    uses models.decode_step; the tiered integration at full-model scale is
-    exercised in examples/serve_tiered.py and tests/test_tiered_kv.py).
+  * tiered KV serving: ``TieredServer`` drives the zero-copy decode step
+    (append -> cached-device-table lookup -> split-pool paged attention)
+    with ``maintain`` between steps and ``release`` on lane recycle, so a
+    finished request's pages leave the metadata structures the moment its
+    lane refills (the full-model decode path uses models.decode_step; the
+    single-attention-layer tiered integration is exercised in
+    examples/serve_tiered.py, tests/test_tiered_kv.py, tests/test_engine.py
+    and the ``serve_decode`` benchmark).
 """
 
 from __future__ import annotations
@@ -25,6 +29,7 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.models import decode_step, init_decode_state, prefill
+from repro.serve.decode import make_tiered_decode_step
 
 
 @dataclasses.dataclass
@@ -42,6 +47,52 @@ class EngineConfig:
     batch: int = 4
     max_len: int = 256
     bucket: int = 64              # straggler bucketing granularity
+
+
+class TieredServer:
+    """Continuous tiered-KV decode driver: the serving glue between lane
+    scheduling and the Trimma-managed two-tier KV store.
+
+    One jitted zero-copy step per token (``serve.decode
+    .make_tiered_decode_step``: append -> cached-table lookup ->
+    split-pool attention), ``maintain`` between steps (bounded
+    promotion/demotion, off the critical path), ``release`` when a lane's
+    request finishes and the lane is recycled — the freed pages drop out
+    of the iRT/iRC/device table in one batched pass, so a dead request
+    never occupies fast slots or metadata.
+    """
+
+    def __init__(self, tcfg, *, path: str = "zero_copy",
+                 impl: str = "auto"):
+        from repro.serve import tiered as srv
+        from repro.tiered import kvcache as tk
+        self.cfg = tcfg
+        self.state = tk.init_state(tcfg)
+        self._step = make_tiered_decode_step(tcfg, path=path, impl=impl)
+        self._maintain = jax.jit(lambda s: srv.maintain(tcfg, s))
+        self._release = jax.jit(lambda s, i: srv.release(tcfg, s, i))
+        self.steps = 0
+
+    def step(self, q, k_new, v_new, pos):
+        """One decode token for every lane; returns [B, KV, G, hd]."""
+        out, self.state = self._step(self.state, q, k_new, v_new, pos)
+        self.steps += 1
+        return out
+
+    def maintain(self):
+        self.state = self._maintain(self.state)
+
+    def release(self, seq: int):
+        self.state = self._release(self.state, jnp.int32(seq))
+
+    @property
+    def counters(self) -> dict:
+        s = self.state
+        return dict(lookups=int(s.lookups), dev_hits=int(s.dev_hits),
+                    irc_hits=int(s.irc_hits), migrations=int(s.migrations),
+                    demotions=int(s.demotions),
+                    promo_bytes=int(s.promo_pages) * self.cfg.page_bytes,
+                    demo_bytes=int(s.demo_pages) * self.cfg.page_bytes)
 
 
 class Engine:

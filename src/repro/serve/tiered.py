@@ -1,21 +1,36 @@
-"""Tiered KV serving path (DESIGN.md §2 Layer C).
+"""Tiered KV serving path (DESIGN.md §2 Layer C) — the zero-copy decode
+hot path.
 
-The decode-attention read for a batch of sequences whose KV pages live
-under Trimma metadata: logical page ids -> ``tiered.kvcache.lookup``
-(iRC probe + batched iRT walk via the shared ``core/remap`` engine) ->
-unified-pool gather -> paged attention.  ``maintain`` runs the
-off-critical-path migration pass (Figure 3's step 3) between decode steps.
+``attend`` is one decode-attention read for a batch of sequences whose KV
+pages live under Trimma metadata, and it moves **no pool bytes**:
+
+  logical page table --`tiered.kvcache.lookup`--> translated device table
+      (served from the cached ``dev_table`` rows; the iRC/iRT engine runs
+       only for live rows whose mapping is not yet cached)
+  device table --split-pool paged attention--> output
+      (the Pallas kernel reads the fast and slow pools in place, routing
+       each page by ``slot < fast_slots`` — the old per-step
+       ``unified_pools`` concatenation, a full KV-cache copy, is gone)
+
+Only pages under ``seq_lens`` are translated or counted (``live_mask``),
+so per-step metadata work scales with live context.  ``maintain`` runs
+the off-critical-path migration pass (Figure 3's step 3) between decode
+steps; its moves write the new translations through the device table, so
+decode never re-walks after churn.
 
 The translation must be invisible to the math: ``attend`` returns exactly
 the dense-cache attention no matter which pages have migrated or been
-evicted (tests/test_engine.py::test_tiered_attend_invariant_under_serving).
+evicted — bit-identical to the legacy concat path ``attend_concat``
+(tests/test_engine.py::test_tiered_attend_invariant_under_serving, under
+every policy preset).
 """
 
 from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.kernels.paged_attention.ops import paged_attention_op
+from repro.kernels.paged_attention.ops import (paged_attention_op,
+                                               paged_attention_split_op)
 from repro.tiered import kvcache as tk
 
 
@@ -26,12 +41,35 @@ def page_table(cfg: tk.TieredConfig, st: tk.TieredState):
     return tk.logical_page(cfg, seqs, pages)
 
 
+def live_mask(cfg: tk.TieredConfig, seq_lens):
+    """[n_seqs, max_pages_per_seq] bool: page j holds context iff its
+    first token position is under the sequence length."""
+    pages = jnp.arange(cfg.max_pages_per_seq, dtype=jnp.int32)[None, :]
+    return pages * cfg.page_tokens < seq_lens[:, None]
+
+
 def attend(cfg: tk.TieredConfig, st: tk.TieredState, q, seq_lens,
            *, impl: str = "auto"):
     """q [B, KV, G, hd], seq_lens [B] -> (attention out, new state).
 
-    One decode-attention read through the engine-translated page table;
-    the iRC/iRT lookup state advances (hit counters, cache fills)."""
+    The zero-copy decode read: cached-device-table lookup over the live
+    pages, then split-pool paged attention straight out of the two tiers."""
+    table, st = tk.lookup(cfg, st, page_table(cfg, st),
+                          live=live_mask(cfg, seq_lens))
+    out = paged_attention_split_op(q, st.fast_k, st.fast_v,
+                                   st.slow_k, st.slow_v, table, seq_lens,
+                                   impl=impl)
+    return out, st
+
+
+def attend_concat(cfg: tk.TieredConfig, st: tk.TieredState, q, seq_lens,
+                  *, impl: str = "auto"):
+    """LEGACY baseline: full-table translation + unified-pool concat (a
+    complete KV-cache copy per step) + unified-pool kernel.  Kept only for
+    the ``serve_decode`` benchmark and the golden-equality regression test
+    — the decode path never calls it.  Pair it with
+    ``cache_device_table=False`` to reproduce the pre-zero-copy path
+    exactly."""
     table, st = tk.lookup(cfg, st, page_table(cfg, st))
     uk, uv = tk.unified_pools(st)
     return paged_attention_op(q, uk, uv, table, seq_lens, impl=impl), st
@@ -43,6 +81,15 @@ def maintain(cfg: tk.TieredConfig, st: tk.TieredState,
     DESIGN.md §7) — bounded promotion *and* demotion queues plus epoch
     decay of the hotness tracker, so the work per call stays off the
     critical path and stale-hot pages eventually return to the slow pool.
-    ``cfg.policy`` selects the scheme; ``max_moves`` (default: the
-    policy's budget) caps promotions + demotions per call."""
+    Every move writes its new translation through ``dev_table`` (epoch-
+    style row updates, like the iRC), so the next ``attend`` re-walks
+    nothing.  ``cfg.policy`` selects the scheme; ``max_moves`` (default:
+    the policy's budget) caps promotions + demotions per call."""
     return tk.run_scheduler(cfg, st, max_moves=max_moves)
+
+
+def release(cfg: tk.TieredConfig, st: tk.TieredState, seq) -> tk.TieredState:
+    """Recycle one lane (continuous batching): drop the finished
+    sequence's pages from every metadata structure in one batched pass
+    (``tiered.kvcache.release_seq``)."""
+    return tk.release_seq(cfg, st, seq)

@@ -35,10 +35,28 @@ touches through the policy's tracker, and ``run_scheduler`` (the
 ``serve/tiered.maintain`` body) plans bounded promotion + demotion queues
 per epoch — ``TieredConfig.policy`` selects the scheme.
 
-The translated page table feeds the Pallas paged-attention kernel (the
-pools are addressed as one *unified* index space: slot < fast_slots -> fast
-pool, else slow home) — on real hardware the two pools live in different
-memory kinds and the gather becomes a DMA, same metadata either way.
+The translated page table feeds the Pallas paged-attention kernels.  The
+pools are *addressed* as one unified index space (slot < fast_slots ->
+fast pool, else fast_slots + home -> slow pool) but since the zero-copy
+decode path they are never *materialised* as one array: the split-pool
+kernel (kernels/paged_attention) reads each tier in place, routing pages
+by the slot range — on real hardware the two pools live in different
+memory kinds (HBM vs host/CXL) and each page's DMA targets its own tier.
+
+Translation itself is amortised, mirroring the paper's remap-cache
+philosophy (translate once, reuse until invalidated): ``TieredState``
+carries the *device page table* (``dev_table``/``dev_valid``), the cached
+result of iRC-probe + iRT-walk per logical page.  ``lookup`` serves valid
+rows without touching the metadata engine and translates only invalid
+live rows; every mapping mutation (promote install, demote, victim /
+forced evict, sequence release) writes the new translation through in
+place — the same entry-granular coherence rule the iRC uses — so
+steady-state decode does zero iRC probes and zero iRT walks.
+
+Migration data movement goes through the migration engine
+(``kernels/remap_gather``): page copies at promote/demote/evict sites are
+``remap_gather_op`` gathers (Pallas DMA pipeline on TPU, ``impl="ref"``
+jnp takes on CPU/CI — ``TieredConfig.gather_impl``).
 
 All state is a pure pytree; every op is jit-able and returns a new state.
 """
@@ -58,6 +76,7 @@ from repro.core.remap import irt as irt_ops
 from repro.core.remap import rcache as rc_ops
 from repro.core.remap.irt import E, INVALID
 from repro.core.remap.rcache import RemapCacheGeometry
+from repro.kernels.remap_gather.ops import remap_gather_op
 
 
 @dataclasses.dataclass(frozen=True)
@@ -80,6 +99,11 @@ class TieredConfig:
     id_ways: int = 16
     dtype: str = "bfloat16"
     walk_impl: str = "auto"         # remap.irt.walk backend selection
+    # decode hot path: keep the translated device table in state and only
+    # re-translate rows whose mapping changed (False = legacy re-walk of
+    # every row per lookup, kept for the serve_decode baseline benchmark)
+    cache_device_table: bool = True
+    gather_impl: str = "auto"       # migration-copy backend (remap_gather)
 
     @property
     def n_logical(self) -> int:
@@ -137,6 +161,11 @@ class TieredState(NamedTuple):
     wtouch: jnp.ndarray          # [n_logical] int32 write intensity
     epoch: jnp.ndarray           # scalar: maintain() calls so far
     fifo_ptr: jnp.ndarray        # scalar
+    # cached device page table (the decode hot path reads THIS, not the
+    # engine): dev_table[p] is p's translated device slot, valid until the
+    # mapping mutates — every mutation site writes the new slot through
+    dev_table: jnp.ndarray       # [n_logical] int32 (unified device slots)
+    dev_valid: jnp.ndarray       # [n_logical] bool
     # iRC (state layout owned by core/remap/rcache)
     nid_tag: jnp.ndarray         # [nid_sets, nid_ways]
     nid_val: jnp.ndarray
@@ -155,6 +184,7 @@ class TieredState(NamedTuple):
     demo_pages: jnp.ndarray      # count * cfg.page_bytes at read-out;
                                  # demo_pages counts ALL fast->slow
                                  # copy-backs (int32-safe page counts)
+    dev_hits: jnp.ndarray        # live lookup lanes served from dev_table
 
 
 _RC_KEYS = ("nid_tag", "nid_val", "nid_fifo", "id_tag", "id_bits", "id_fifo")
@@ -216,10 +246,14 @@ def init_state(cfg: TieredConfig) -> TieredState:
         wtouch=z((cfg.n_logical,), jnp.int32),
         epoch=z((), jnp.int32),
         fifo_ptr=z((), jnp.int32),
+        dev_table=cfg.fast_slots + jnp.arange(cfg.n_logical,
+                                              dtype=jnp.int32),
+        dev_valid=z((cfg.n_logical,), jnp.bool_),
         lookups=z((), jnp.int32), irc_hits=z((), jnp.int32),
         irc_id_hits=z((), jnp.int32), migrations=z((), jnp.int32),
         demotions=z((), jnp.int32), forced_evict=z((), jnp.int32),
         promo_pages=z((), jnp.int32), demo_pages=z((), jnp.int32),
+        dev_hits=z((), jnp.int32),
         **rc,
     )
 
@@ -232,15 +266,12 @@ def logical_page(cfg: TieredConfig, seq: jnp.ndarray, j: jnp.ndarray):
 # lookup: logical page table -> device page table (the serving hot path)
 # ---------------------------------------------------------------------------
 
-def lookup(cfg: TieredConfig, st: TieredState, page_ids):
-    """page_ids [B, npages] logical -> (device_table [B, npages], state).
-
-    Device slots index the *unified* pool: < fast_slots -> fast pool,
-    otherwise fast_slots + home (slow pool).  iRC is probed first; misses
-    walk the iRT (both levels in parallel — ``remap.irt.walk``, which
-    routes large batches to the Pallas kernel)."""
-    B, NP = page_ids.shape
-    ids = page_ids.reshape(-1)
+def _translate(cfg: TieredConfig, st: TieredState, ids, enable):
+    """The metadata path for one batch of page ids [N]: iRC probe, then
+    the parallel two-level iRT walk (``remap.irt.walk`` routes large
+    batches to the Pallas kernel).  iRC fills and every counter are masked
+    by ``enable`` — disabled lanes cost nothing in the books.  Returns
+    (device slots [N] — only enabled lanes meaningful, state)."""
     rcg = cfg.rc_geometry
     hit, val, id_hit = rc_ops.probe(rcg, _rc_view(st), ids)
     home = cfg.fast_slots + ids
@@ -250,22 +281,101 @@ def lookup(cfg: TieredConfig, st: TieredState, page_ids):
     dev_irc = jnp.where(id_hit, home, val)
     dev = jnp.where(hit, dev_irc, dev_walk)
     st = st._replace(**rc_ops.fill(rcg, _rc_view(st), ids, walked,
-                                   st.leaf_table, ~hit))
-    st = _tr_replace(st, pol_track.record(cfg.pol, _tr_view(cfg, st), ids,
-                                          now=_now(cfg, st)))
+                                   st.leaf_table, enable & ~hit))
     st = st._replace(
-        lookups=st.lookups + ids.shape[0],
-        irc_hits=st.irc_hits + hit.sum(dtype=jnp.int32),
-        irc_id_hits=st.irc_id_hits + id_hit.sum(dtype=jnp.int32))
+        lookups=st.lookups + enable.sum(dtype=jnp.int32),
+        irc_hits=st.irc_hits + (enable & hit).sum(dtype=jnp.int32),
+        irc_id_hits=st.irc_id_hits + (enable & id_hit).sum(dtype=jnp.int32))
+    return dev, st
+
+
+def lookup(cfg: TieredConfig, st: TieredState, page_ids, live=None):
+    """page_ids [B, npages] logical -> (device_table [B, npages], state).
+
+    Device slots index the *unified* address space: < fast_slots -> fast
+    pool, otherwise fast_slots + home (slow pool) — the split-pool kernel
+    routes on exactly this encoding, no concatenated pool exists.
+
+    ``live`` [B, npages] bool masks the lanes that actually hold context
+    (pages under ``seq_lens``): dead lanes are never translated or
+    counted — translation work scales with live context, not max context
+    — and resolve to their identity home (attention weights there are
+    exactly zero, so any in-bounds slot is equivalent).
+
+    With ``cfg.cache_device_table`` (the default), valid ``dev_table``
+    rows are served directly and the metadata engine runs only when some
+    live row is invalid (``lax.cond`` skips it entirely otherwise), so
+    steady-state decode performs zero iRC probes and zero iRT walks.
+    Hotness is recorded for every live lane either way — caching the
+    translation must not starve the policy's tracker."""
+    B, NP = page_ids.shape
+    ids = page_ids.reshape(-1)
+    lv = (jnp.ones(ids.shape, jnp.bool_) if live is None
+          else jnp.asarray(live).reshape(-1))
+    home = cfg.fast_slots + ids
+    if not cfg.cache_device_table:
+        dev, st = _translate(cfg, st, ids, lv)
+        dev = jnp.where(lv, dev, home)
+    else:
+        need = lv & ~st.dev_valid[ids]
+        # the cond carries ONLY the metadata arrays the engine can write —
+        # routing the whole state (the KV pools!) through a lax.cond would
+        # copy the pools at the conditional boundary, the very cost this
+        # path exists to delete
+        carry_keys = _RC_KEYS + ("dev_table", "dev_valid", "lookups",
+                                 "irc_hits", "irc_id_hits")
+
+        def _miss(sub):
+            s = st._replace(**sub)
+            dev, s = _translate(cfg, s, ids, need)
+            idx = jnp.where(need, ids, cfg.n_logical)
+            s = s._replace(
+                dev_table=s.dev_table.at[idx].set(dev, mode="drop"),
+                dev_valid=s.dev_valid.at[idx].set(True, mode="drop"))
+            return {k: getattr(s, k) for k in carry_keys}
+
+        sub = jax.lax.cond(need.any(), _miss, lambda sub: dict(sub),
+                           {k: getattr(st, k) for k in carry_keys})
+        st = st._replace(**sub)
+        st = st._replace(
+            dev_hits=st.dev_hits + (lv & ~need).sum(dtype=jnp.int32))
+        dev = jnp.where(lv, st.dev_table[ids], home)
+    st = _tr_replace(st, pol_track.record(cfg.pol, _tr_view(cfg, st), ids,
+                                          now=_now(cfg, st), enable=lv))
     return dev.reshape(B, NP), st
 
 
 def unified_pools(st: TieredState):
-    """Concatenated (fast | slow) pools for the paged-attention gather.
-    On TPU the slow half is host memory and this concat is replaced by a
-    memory-kind-aware DMA (deployment note, DESIGN.md)."""
+    """LEGACY: concatenated (fast | slow) pools — a full KV-cache copy.
+    The decode path no longer calls this (the split-pool kernel reads both
+    tiers in place); it survives as the reference layout for ground-truth
+    checks and the ``serve_decode`` baseline benchmark.  It could never map
+    onto deployment hardware, where the tiers are different memory kinds."""
     return (jnp.concatenate([st.fast_k, st.slow_k], axis=0),
             jnp.concatenate([st.fast_v, st.slow_v], axis=0))
+
+
+def _page_gather(cfg: TieredConfig, pool, pid):
+    """Fetch one page [KV, page, hd] through the migration engine
+    (kernels/remap_gather: scalar-prefetched Pallas DMA on TPU,
+    ``impl="ref"`` jnp take on CPU/CI — ``cfg.gather_impl`` selects)."""
+    n, KV, P, hd = pool.shape
+    out = remap_gather_op(pool.reshape(n, KV * P, hd),
+                          jnp.asarray(pid, jnp.int32)[None],
+                          impl=cfg.gather_impl)
+    return out.reshape(KV, P, hd)
+
+
+def _dev_update(cfg: TieredConfig, st: TieredState, pid, slot,
+                enable) -> TieredState:
+    """Write a page's new translation through the cached device table
+    (entry-granular coherence, like the iRC's in-place bit update): the
+    row stays valid, so mapping churn costs zero re-walks on the decode
+    path.  All scalars; masked by ``enable``."""
+    idx = jnp.where(enable, pid, cfg.n_logical)
+    return st._replace(
+        dev_table=st.dev_table.at[idx].set(slot, mode="drop"),
+        dev_valid=st.dev_valid.at[idx].set(True, mode="drop"))
 
 
 # ---------------------------------------------------------------------------
@@ -312,15 +422,19 @@ def _leaf_hosting_slot(cfg: TieredConfig, leaf):
 def _drop_entry(cfg: TieredConfig, st: TieredState, pid, enable,
                 copy_back_from=None) -> TieredState:
     """Shared eviction tail: clear pid's iRT entry (engine op), update the
-    iRC (entry becomes identity), optionally copy the fast bytes home."""
+    iRC (entry becomes identity), write the identity translation through
+    the device table, optionally copy the fast bytes home (a migration-
+    engine gather + masked scatter)."""
     pv = jnp.where(enable, pid, 0)
     if copy_back_from is not None:
         src = jnp.where(enable, copy_back_from, 0)
         st = st._replace(
             slow_k=st.slow_k.at[pv].set(
-                jnp.where(enable, st.fast_k[src], st.slow_k[pv])),
+                jnp.where(enable, _page_gather(cfg, st.fast_k, src),
+                          st.slow_k[pv])),
             slow_v=st.slow_v.at[pv].set(
-                jnp.where(enable, st.fast_v[src], st.slow_v[pv])),
+                jnp.where(enable, _page_gather(cfg, st.fast_v, src),
+                          st.slow_v[pv])),
             # every fast->slow copy-back is migration bandwidth, whether a
             # scheduler demotion, a FIFO victim or a forced metadata evict
             demo_pages=st.demo_pages + jnp.where(enable, 1, 0))
@@ -329,7 +443,7 @@ def _drop_entry(cfg: TieredConfig, st: TieredState, pid, enable,
     st = st._replace(**rc_ops.invalidate(
         cfg.rc_geometry, _rc_view(st), pv[None], enable[None],
         becomes_identity=True))
-    return st
+    return _dev_update(cfg, st, pv, cfg.fast_slots + pv, enable)
 
 
 def migrate_one(cfg: TieredConfig, st: TieredState, page_id, enable):
@@ -370,13 +484,15 @@ def migrate_one(cfg: TieredConfig, st: TieredState, page_id, enable):
     has_o = en & (o != INVALID)
     st = _drop_entry(cfg, st, o, has_o, copy_back_from=jnp.where(en, v, 0))
 
-    # --- install the page -------------------------------------------------
+    # --- install the page (migration-engine gather from the slow home) ----
     vv = jnp.where(en, v, 0)
     st = st._replace(
         fast_k=st.fast_k.at[vv].set(
-            jnp.where(en, st.slow_k[pid], st.fast_k[vv])),
+            jnp.where(en, _page_gather(cfg, st.slow_k, pid),
+                      st.fast_k[vv])),
         fast_v=st.fast_v.at[vv].set(
-            jnp.where(en, st.slow_v[pid], st.fast_v[vv])),
+            jnp.where(en, _page_gather(cfg, st.slow_v, pid),
+                      st.fast_v[vv])),
         slot_owner=st.slot_owner.at[vv].set(
             jnp.where(en, pid, st.slot_owner[vv])),
         migrations=st.migrations + jnp.where(en, 1, 0),
@@ -386,6 +502,7 @@ def migrate_one(cfg: TieredConfig, st: TieredState, page_id, enable):
     st = st._replace(**rc_ops.invalidate(
         cfg.rc_geometry, _rc_view(st), pid[None], en[None],
         becomes_identity=False))
+    st = _dev_update(cfg, st, pid, vv, en)
 
     # --- metadata priority: evict data from the newly-allocated leaf's
     # hosting slot (Section 3.3) -----------------------------------------
@@ -417,6 +534,35 @@ def demote_one(cfg: TieredConfig, st: TieredState, page_id, enable):
             jnp.where(en, INVALID, st.slot_owner[slot])),
         demotions=st.demotions + jnp.where(en, 1, 0))
     return st
+
+
+def release_seq(cfg: TieredConfig, st: TieredState, seq) -> TieredState:
+    """Free one sequence's pages when its lane is recycled (continuous
+    batching: a finished request's KV is dead the moment the lane refills).
+
+    No bytes move — the pages are garbage — but every metadata structure
+    resets to identity in one batched pass: iRT entries cleared (engine
+    op over the row), fast slots released, hotness forgotten, the iRC
+    row-range invalidated (``remap.rcache.invalidate_range`` — one dense
+    pass instead of ``max_pages_per_seq`` per-id probes), and the device
+    table's rows rewritten to the identity homes, still valid."""
+    seq = jnp.asarray(seq, jnp.int32)
+    lo = seq * cfg.max_pages_per_seq
+    ids = lo + jnp.arange(cfg.max_pages_per_seq, dtype=jnp.int32)
+    entry = st.leaf_table[ids]
+    res = entry != INVALID
+    st = st._replace(
+        slot_owner=st.slot_owner.at[jnp.where(res, entry, cfg.fast_slots)]
+        .set(INVALID, mode="drop"))
+    st = _irt_replace(st, irt_ops.invalidate(_irt_view(st), ids, res))
+    st = st._replace(**rc_ops.invalidate_range(
+        cfg.rc_geometry, _rc_view(st), lo, lo + cfg.max_pages_per_seq))
+    st = _tr_replace(st, pol_track.forget(
+        cfg.pol, _tr_view(cfg, st), ids, jnp.ones_like(res)))
+    return st._replace(
+        wtouch=st.wtouch.at[ids].set(0),
+        dev_table=st.dev_table.at[ids].set(cfg.fast_slots + ids),
+        dev_valid=st.dev_valid.at[ids].set(True))
 
 
 def run_scheduler(cfg: TieredConfig, st: TieredState,

@@ -2,6 +2,7 @@
 
 import jax
 import numpy as np
+import pytest
 
 from repro.configs import get_config, reduce_for_smoke
 from repro.models import init_params
@@ -39,29 +40,99 @@ def test_bucketing_prefers_similar_lengths():
     assert order.index(2) < order.index(1), order
 
 
-def test_tiered_attend_invariant_under_serving():
-    """serve.tiered: decode attention through the Trimma-translated page
-    table equals the dense read from the homes across migration rounds."""
-    import jax.numpy as jnp
-    from repro.serve import tiered as srv
+def _tiered_cfg(**kw):
     from repro.tiered import kvcache as tk
+    base = dict(n_seqs=2, max_pages_per_seq=64, page_tokens=16,
+                n_kv_heads=2, head_dim=32, fast_data_slots=4,
+                migrate_threshold=2, dtype="float32")
+    base.update(kw)
+    return tk.TieredConfig(**base)
 
-    cfg = tk.TieredConfig(n_seqs=2, max_pages_per_seq=64, page_tokens=16,
-                          n_kv_heads=2, head_dim=32, fast_data_slots=4,
-                          migrate_threshold=2, dtype="float32")
-    key = jax.random.key(0)
+
+def _filled_tiered(cfg, key):
+    import jax.numpy as jnp
+    from repro.tiered import kvcache as tk
     st = tk.init_state(cfg)
-    st = st._replace(
+    return st._replace(
         slow_k=jax.random.normal(key, st.slow_k.shape, jnp.float32),
         slow_v=jax.random.normal(jax.random.fold_in(key, 1),
                                  st.slow_v.shape, jnp.float32))
+
+
+def _presets():
+    from repro.core.policy import PRESETS
+    return sorted(PRESETS)
+
+
+@pytest.mark.parametrize("preset", _presets())
+def test_tiered_attend_invariant_under_serving(preset):
+    """The zero-copy decode read (cached device table + split-pool
+    kernel) must be BIT-IDENTICAL to the legacy path (full per-step
+    re-translation + unified-pool concat) across append -> maintain ->
+    evict interleavings, under every policy preset — the staleness /
+    golden-equality regression for the cached table."""
+    import dataclasses
+
+    import jax.numpy as jnp
+    from repro.core.policy import get_policy
+    from repro.serve import tiered as srv
+    from repro.tiered import kvcache as tk
+
+    cfg = _tiered_cfg(policy=get_policy(preset, epoch_len=2),
+                      migrate_threshold=None)
+    cfg_legacy = dataclasses.replace(cfg, cache_device_table=False)
+    key = jax.random.key(0)
+    st = _filled_tiered(cfg, key)
+    st_legacy = _filled_tiered(cfg_legacy, key)
     q = jax.random.normal(jax.random.fold_in(key, 2),
                           (cfg.n_seqs, cfg.n_kv_heads, 4, cfg.head_dim))
-    sl = jnp.full((cfg.n_seqs,), 128, jnp.int32)
-    out0, st = srv.attend(cfg, st, q, sl)
-    for _ in range(6):
-        st = srv.maintain(cfg, st, max_moves=3)
+    seqs = jnp.arange(cfg.n_seqs)
+    pos = 126                      # appends cross a page boundary mid-run
+    for step in range(8):
+        k1 = jax.random.normal(jax.random.fold_in(key, 100 + step),
+                               (cfg.n_seqs, cfg.n_kv_heads, cfg.head_dim))
+        v1 = jax.random.normal(jax.random.fold_in(key, 200 + step),
+                               (cfg.n_seqs, cfg.n_kv_heads, cfg.head_dim))
+        st = tk.append_token(cfg, st, seqs, k1, v1, pos)
+        st_legacy = tk.append_token(cfg_legacy, st_legacy, seqs, k1, v1, pos)
+        pos += 1
+        sl = jnp.full((cfg.n_seqs,), pos, jnp.int32)
         out, st = srv.attend(cfg, st, q, sl)
-        np.testing.assert_allclose(np.asarray(out), np.asarray(out0),
-                                   rtol=1e-5, atol=1e-5)
-    assert int(st.migrations) > 0
+        ref, st_legacy = srv.attend_concat(cfg_legacy, st_legacy, q, sl)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+        st = srv.maintain(cfg, st, max_moves=3)
+        st_legacy = srv.maintain(cfg_legacy, st_legacy, max_moves=3)
+    assert int(st.migrations) + int(st.demotions) > 0
+
+
+def test_tiered_server_decode_loop():
+    """TieredServer: jitted zero-copy steps + maintain + lane release;
+    steady-state steps are served from the device table, and a released
+    lane's pages vanish from the metadata."""
+    import jax.numpy as jnp
+    from repro.serve.engine import TieredServer
+    from repro.tiered import kvcache as tk
+
+    cfg = _tiered_cfg()
+    srv = TieredServer(cfg)
+    key = jax.random.key(3)
+    srv.state = _filled_tiered(cfg, key)
+    q = jax.random.normal(jax.random.fold_in(key, 1),
+                          (cfg.n_seqs, cfg.n_kv_heads, 4, cfg.head_dim))
+    kv = jax.random.normal(jax.random.fold_in(key, 2),
+                           (cfg.n_seqs, cfg.n_kv_heads, cfg.head_dim))
+    out0 = srv.step(q, kv, kv, pos=100)
+    for pos in range(101, 113):
+        out = srv.step(q, kv, kv, pos)
+        if pos % 4 == 0:
+            srv.maintain()
+    assert out.shape == out0.shape and np.isfinite(np.asarray(out)).all()
+    c = srv.counters
+    assert c["dev_hits"] > 0, "steady state never hit the device table"
+    assert c["lookups"] < srv.steps * cfg.n_logical / 4, \
+        "decode path is still translating every page every step"
+    srv.release(0)
+    lt = np.asarray(srv.state.leaf_table)
+    assert (lt[:cfg.max_pages_per_seq] == tk.INVALID).all()
+    out2 = srv.step(q, kv, kv, pos=113)
+    assert np.isfinite(np.asarray(out2)).all()

@@ -11,8 +11,10 @@ from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.irt_lookup.irt_lookup import E as LEAF_E
 from repro.kernels.irt_lookup.irt_lookup import irt_lookup
 from repro.kernels.irt_lookup.ref import irt_lookup_ref
-from repro.kernels.paged_attention.paged_attention import paged_attention
-from repro.kernels.paged_attention.ref import paged_attention_ref
+from repro.kernels.paged_attention.paged_attention import (
+    paged_attention, paged_attention_split)
+from repro.kernels.paged_attention.ref import (paged_attention_ref,
+                                               paged_attention_split_ref)
 from repro.kernels.remap_gather.ops import remap_scatter_op
 from repro.kernels.remap_gather.remap_gather import remap_gather
 from repro.kernels.remap_gather.ref import remap_gather_ref
@@ -103,6 +105,77 @@ def test_paged_attention_respects_page_table():
     out = paged_attention(q, kp[perm], vp[perm], inv[pt], sl, interpret=True)
     np.testing.assert_allclose(np.asarray(out), np.asarray(base),
                                rtol=3e-5, atol=3e-5)
+
+
+def _split_table(key, B, npages, fast_slots, n_homes):
+    """A Trimma-valid split page table: some lanes routed to *distinct*
+    fast slots (slot_owner is injective, so at most fast_slots lanes can
+    ever be fast-routed), the rest to slow homes."""
+    n = B * npages
+    n_fast = min(fast_slots, max(1, n // 3))
+    lanes = jax.random.permutation(key, n)[:n_fast]
+    slots = jax.random.permutation(jax.random.fold_in(key, 1),
+                                   fast_slots)[:n_fast]
+    flat = fast_slots + jax.random.randint(jax.random.fold_in(key, 2),
+                                           (n,), 0, n_homes)
+    return flat.at[lanes].set(slots).reshape(B, npages).astype(jnp.int32)
+
+
+@pytest.mark.parametrize("B,KV,G,hd,page,npages,fast_slots,n_homes", [
+    (2, 2, 4, 64, 64, 4, 8, 16),
+    (1, 4, 8, 128, 128, 8, 4, 32),
+    (3, 1, 2, 64, 32, 5, 6, 24),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_attention_split_sweep(B, KV, G, hd, page, npages,
+                                     fast_slots, n_homes, dtype):
+    """Split-pool kernel vs both oracles, ragged per-sequence lengths."""
+    q = jax.random.normal(KEY, (B, KV, G, hd), dtype)
+    fk = jax.random.normal(jax.random.fold_in(KEY, 1),
+                           (fast_slots, KV, page, hd), dtype)
+    fv = jax.random.normal(jax.random.fold_in(KEY, 2),
+                           (fast_slots, KV, page, hd), dtype)
+    sk = jax.random.normal(jax.random.fold_in(KEY, 3),
+                           (n_homes, KV, page, hd), dtype)
+    sv = jax.random.normal(jax.random.fold_in(KEY, 4),
+                           (n_homes, KV, page, hd), dtype)
+    pt = _split_table(jax.random.fold_in(KEY, 5), B, npages, fast_slots,
+                      n_homes)
+    sl = jax.random.randint(jax.random.fold_in(KEY, 6), (B,), 1,
+                            npages * page + 1).astype(jnp.int32)
+    ref = paged_attention_split_ref(q, fk, fv, sk, sv, pt, sl)
+    out = paged_attention_split(q, fk, fv, sk, sv, pt, sl, interpret=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+def test_paged_attention_split_matches_concat_bitwise():
+    """The split-pool read must be indistinguishable from the legacy
+    concatenated-pool read: same table, same bytes, bit-identical output
+    (kernel vs kernel in interpret mode, and oracle vs oracle)."""
+    B, KV, G, hd, page, npages = 2, 2, 2, 64, 32, 6
+    fast_slots, n_homes = 8, 16
+    q = jax.random.normal(KEY, (B, KV, G, hd))
+    fk = jax.random.normal(jax.random.fold_in(KEY, 1),
+                           (fast_slots, KV, page, hd))
+    fv = jax.random.normal(jax.random.fold_in(KEY, 2),
+                           (fast_slots, KV, page, hd))
+    sk = jax.random.normal(jax.random.fold_in(KEY, 3),
+                           (n_homes, KV, page, hd))
+    sv = jax.random.normal(jax.random.fold_in(KEY, 4),
+                           (n_homes, KV, page, hd))
+    pt = _split_table(jax.random.fold_in(KEY, 5), B, npages, fast_slots,
+                      n_homes)
+    sl = jnp.array([npages * page, 3 * page - 5], jnp.int32)
+    uk = jnp.concatenate([fk, sk])
+    uv = jnp.concatenate([fv, sv])
+    np.testing.assert_array_equal(
+        np.asarray(paged_attention_split_ref(q, fk, fv, sk, sv, pt, sl)),
+        np.asarray(paged_attention_ref(q, uk, uv, pt, sl)))
+    np.testing.assert_array_equal(
+        np.asarray(paged_attention_split(q, fk, fv, sk, sv, pt, sl,
+                                         interpret=True)),
+        np.asarray(paged_attention(q, uk, uv, pt, sl, interpret=True)))
 
 
 # ---------------------------------------------------------------------------

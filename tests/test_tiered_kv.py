@@ -6,6 +6,8 @@ have migrated, been evicted, or force-evicted for metadata — the metadata
 scheme must be invisible to the math (the paper's translation-correctness
 requirement)."""
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -19,6 +21,9 @@ from repro.tiered import kvcache as tk
 CFG = tk.TieredConfig(
     n_seqs=2, max_pages_per_seq=64, page_tokens=16, n_kv_heads=2, head_dim=32,
     fast_data_slots=4, migrate_threshold=2, dtype="float32")
+# legacy translate-every-call mode (the device-table cache disabled): the
+# baseline the zero-copy path must match bit for bit
+CFG_NC = dataclasses.replace(CFG, cache_device_table=False)
 
 
 def _filled_state(key):
@@ -169,12 +174,118 @@ def test_append_token_routes_to_current_location(state):
 
 
 def test_irc_hit_accounting(state):
-    st = state
+    # CFG_NC: with the device-table cache on, a repeated lookup never
+    # reaches the iRC at all (that is the point) — the iRC accounting
+    # itself is pinned in the legacy translate-every-call mode
+    st = tk.init_state(CFG_NC)._replace(slow_k=state.slow_k,
+                                        slow_v=state.slow_v)
     pages = jnp.zeros((CFG.n_seqs, 4), jnp.int32)
     ids = tk.logical_page(CFG, jnp.arange(CFG.n_seqs)[:, None],
                           pages + jnp.arange(4)[None, :])
-    _, st = tk.lookup(CFG, st, ids)
+    _, st = tk.lookup(CFG_NC, st, ids)
     h0 = int(st.irc_hits)
-    _, st = tk.lookup(CFG, st, ids)   # second probe: sector lines present
+    _, st = tk.lookup(CFG_NC, st, ids)   # second probe: sector lines present
     assert int(st.irc_hits) > h0
     assert int(st.irc_id_hits) > 0
+
+
+def test_device_table_serves_steady_state(state):
+    """With the cache on, a repeated lookup is served entirely from
+    dev_table: zero new metadata-path lanes, all live lanes dev hits."""
+    st = state
+    ids = jnp.arange(CFG.n_logical).reshape(CFG.n_seqs, -1)
+    _, st = tk.lookup(CFG, st, ids)
+    assert int(st.lookups) == CFG.n_logical          # cold: translate all
+    l0, d0 = int(st.lookups), int(st.dev_hits)
+    _, st = tk.lookup(CFG, st, ids)
+    assert int(st.lookups) == l0                     # steady: zero walks
+    assert int(st.dev_hits) == d0 + CFG.n_logical
+
+
+def test_lookup_counts_only_live_lanes():
+    """The lookup stats must not be inflated by pages past seq_lens
+    (the overcounting regression): only live lanes are translated,
+    counted, or heated."""
+    st = tk.init_state(CFG_NC)
+    ids = jnp.arange(CFG.n_logical).reshape(CFG.n_seqs, -1)
+    live = jnp.zeros(ids.shape, bool).at[:, :5].set(True)
+    table, st = tk.lookup(CFG_NC, st, ids, live=live)
+    assert int(st.lookups) == 2 * 5
+    assert int(st.touch.sum()) == 2 * 5
+    # dead lanes resolve to their identity home (safe in-bounds slots)
+    np.testing.assert_array_equal(np.asarray(table),
+                                  CFG.fast_slots + np.asarray(ids))
+    # cached mode: same live accounting, then served from the table
+    st2 = tk.init_state(CFG)
+    _, st2 = tk.lookup(CFG, st2, ids, live=live)
+    assert int(st2.lookups) == 2 * 5 and int(st2.dev_hits) == 0
+    _, st2 = tk.lookup(CFG, st2, ids, live=live)
+    assert int(st2.lookups) == 2 * 5 and int(st2.dev_hits) == 2 * 5
+
+
+def test_device_table_coherent_under_churn(state):
+    """Write-through coherence (the staleness regression): after any
+    interleaving of lookups, appends, migrations, demotions and releases,
+    every valid dev_table row equals the ground-truth translation."""
+    st = state
+    key = jax.random.key(11)
+    ids_all = jnp.arange(CFG.n_logical).reshape(CFG.n_seqs, -1)
+    _, st = tk.lookup(CFG, st, ids_all)          # warm the device table
+    k1 = jnp.ones((CFG.n_seqs, CFG.n_kv_heads, CFG.head_dim))
+    for step in range(12):
+        pages = jax.random.randint(jax.random.fold_in(key, step),
+                                   (CFG.n_seqs, 3), 0, CFG.max_pages_per_seq)
+        ids = tk.logical_page(CFG, jnp.arange(CFG.n_seqs)[:, None], pages)
+        _, st = tk.lookup(CFG, st, ids)
+        st = tk.migrate_hot(CFG, st, max_moves=2)
+        st = tk.append_token(CFG, st, jnp.arange(CFG.n_seqs), k1, k1,
+                             pos=step)
+        if step == 5:
+            st = tk.demote_one(CFG, st, jnp.int32(int(pages[0, 0])),
+                               jnp.bool_(True))
+        if step == 8:
+            st = tk.release_seq(CFG, st, 1)
+        lt = np.asarray(st.leaf_table)[:CFG.n_logical]
+        truth = np.where(lt != tk.INVALID, lt,
+                         CFG.fast_slots + np.arange(CFG.n_logical))
+        valid = np.asarray(st.dev_valid)
+        got = np.asarray(st.dev_table)
+        np.testing.assert_array_equal(got[valid], truth[valid])
+    assert int(st.migrations) > 0
+
+
+def test_release_seq_resets_all_metadata(state):
+    """Releasing a lane drops its pages from the iRT, the fast slots, the
+    iRC and the hotness tracker — and leaves the other lane untouched."""
+    st = state
+    ids = jnp.arange(CFG.n_logical).reshape(CFG.n_seqs, -1)
+    _, st = tk.lookup(CFG, st, ids)
+    st = st._replace(touch=st.touch.at[:6].set(9)
+                     .at[CFG.max_pages_per_seq:CFG.max_pages_per_seq + 4]
+                     .set(9))
+    for _ in range(3):
+        st = tk.migrate_hot(CFG, st, max_moves=3)
+    assert int((np.asarray(st.leaf_table)[:CFG.max_pages_per_seq]
+                != tk.INVALID).sum()) > 0
+    resident_1 = np.asarray(
+        st.leaf_table)[CFG.max_pages_per_seq:CFG.n_logical].copy()
+    st = tk.release_seq(CFG, st, 0)
+    lt = np.asarray(st.leaf_table)
+    owner = np.asarray(st.slot_owner)
+    # seq 0 rows are identity everywhere
+    assert (lt[:CFG.max_pages_per_seq] == tk.INVALID).all()
+    assert (np.asarray(st.touch)[:CFG.max_pages_per_seq] == 0).all()
+    table, st = tk.lookup(CFG, st, ids)
+    np.testing.assert_array_equal(
+        np.asarray(table[0]),
+        CFG.fast_slots + np.arange(CFG.max_pages_per_seq))
+    # seq 1 mapping untouched; no slot still claims a seq-0 page
+    np.testing.assert_array_equal(
+        lt[CFG.max_pages_per_seq:CFG.n_logical], resident_1)
+    assert not np.isin(owner, np.arange(CFG.max_pages_per_seq)).any()
+    # forward/inverse agreement + leaf counts survive the bulk reset
+    for pid in np.nonzero(lt[:CFG.n_logical] != tk.INVALID)[0]:
+        assert owner[lt[pid]] == pid
+    cnt = np.zeros(CFG.n_leaf, np.int32)
+    np.add.at(cnt, np.nonzero(lt[:CFG.n_logical] != tk.INVALID)[0] // tk.E, 1)
+    np.testing.assert_array_equal(cnt, np.asarray(st.leaf_cnt))
