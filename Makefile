@@ -2,15 +2,18 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: verify test bench-smoke bench-serve bench golden examples-smoke
+.PHONY: verify test bench-smoke bench-serve bench-engine bench golden \
+	examples-smoke
 
 verify: test bench-smoke examples-smoke
 
 test:
 	$(PY) -m pytest -x -q
 
-# --smoke includes the serve_decode decode-step microbenchmark; check_bench
-# gates on the cached zero-copy path beating the legacy concat baseline
+# --smoke includes the serve_decode decode-step microbenchmark AND the
+# engine_decode full-model dense-vs-tiered loop; check_bench gates on the
+# cached zero-copy path beating the legacy concat baseline and on the
+# tiered backend's logits being bit-identical to the dense backend
 bench-smoke:
 	$(PY) -m benchmarks.run --smoke
 	@test -f BENCH_smoke.json && echo "BENCH_smoke.json written"
@@ -19,7 +22,12 @@ bench-smoke:
 # serve decode microbenchmark only (merges into BENCH_smoke.json)
 bench-serve:
 	$(PY) -m benchmarks.run --serve
-	$(PY) -m benchmarks.check_bench BENCH_smoke.json
+	$(PY) -m benchmarks.check_bench BENCH_smoke.json serve_decode
+
+# full-model engine decode benchmark only (merges into BENCH_smoke.json)
+bench-engine:
+	$(PY) -m benchmarks.run --engine
+	$(PY) -m benchmarks.check_bench BENCH_smoke.json engine_decode
 
 # every example on a tiny geometry (EXAMPLES_SMOKE=1), so the demos can't
 # silently rot — CI runs this too
@@ -28,6 +36,7 @@ examples-smoke:
 	EXAMPLES_SMOKE=1 $(PY) examples/trimma_sim_demo.py
 	EXAMPLES_SMOKE=1 $(PY) examples/policy_sweep.py
 	EXAMPLES_SMOKE=1 $(PY) examples/serve_tiered.py
+	EXAMPLES_SMOKE=1 $(PY) examples/engine_tiered.py
 	@echo "examples-smoke OK"
 
 bench:

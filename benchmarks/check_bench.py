@@ -1,12 +1,27 @@
-"""CI gate over BENCH_smoke.json's ``serve_decode`` section.
+"""CI gate over BENCH_smoke.json's ``serve_decode`` and ``engine_decode``
+sections.
 
-The zero-copy PR's contract: the cached split-pool decode path must beat
-the legacy concat path *it was measured alongside* (same run, same
-machine) on both steps/s and metadata-path translated pages per step.
-Exits non-zero — failing the build — if the section is missing or the
-cached path has regressed behind its own baseline.
+serve_decode (the zero-copy PR's contract): the cached split-pool decode
+path must beat the legacy concat path *it was measured alongside* (same
+run, same machine) on both steps/s and metadata-path translated pages
+per step.
 
-Usage: PYTHONPATH=src python -m benchmarks.check_bench [BENCH_smoke.json]
+engine_decode (the full-model tiered-serving contract): both KV backends
+ran (positive tokens/s), the tiered backend actually exercised its
+metadata path (device-table hits), and — the paper's translation-
+correctness requirement end to end — the tiered logits matched the dense
+logits EXACTLY over the measured stream (max |diff| == 0).
+
+Exits non-zero — failing the build — if a section is missing or its
+contract regressed.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.check_bench [BENCH_smoke.json]
+                                                  [section ...]
+
+With no section arguments both contracts are enforced (the CI smoke run
+writes both); ``make bench-serve`` / ``make bench-engine`` pass their own
+section so the standalone targets stay self-contained.
 """
 
 from __future__ import annotations
@@ -15,19 +30,7 @@ import json
 import sys
 
 
-def check(path: str = "BENCH_smoke.json") -> int:
-    try:
-        with open(path) as f:
-            payload = json.load(f)
-    except OSError as e:
-        print(f"check_bench: cannot read {path}: {e}", file=sys.stderr)
-        return 1
-    sd = payload.get("serve_decode")
-    if not sd:
-        print(f"check_bench: no serve_decode section in {path} "
-              "(run benchmarks.run --smoke or --serve first)",
-              file=sys.stderr)
-        return 1
+def _check_serve(sd) -> bool:
     legacy = sd["legacy_concat_uncached"]
     cached = sd["zero_copy_cached"]
     speed_ok = cached["us_per_step"] < legacy["us_per_step"]
@@ -40,8 +43,56 @@ def check(path: str = "BENCH_smoke.json") -> int:
     print(f"serve_decode: cached {cached['translated_pages_per_step']:.2f} "
           f"vs concat {legacy['translated_pages_per_step']:.2f} "
           f"translated pages/step [{'OK' if pages_ok else 'REGRESSED'}]")
-    return 0 if (speed_ok and pages_ok) else 1
+    return speed_ok and pages_ok
+
+
+def _check_engine(ed) -> bool:
+    dense, tiered = ed["dense_backend"], ed["tiered_backend"]
+    ran_ok = dense["tokens_per_s"] > 0 and tiered["tokens_per_s"] > 0
+    meta_ok = tiered.get("dev_hits", 0) > 0
+    parity_ok = ed["logits_max_abs_diff"] == 0.0
+    print(f"engine_decode: dense {dense['tokens_per_s']:.0f} tok/s, "
+          f"tiered {tiered['tokens_per_s']:.0f} tok/s "
+          f"[{'OK' if ran_ok else 'REGRESSED'}]")
+    print(f"engine_decode: tiered dev_hits={tiered.get('dev_hits', 0)} "
+          f"migrations={tiered.get('migrations', 0)} "
+          f"[{'OK' if meta_ok else 'NO METADATA PATH'}]")
+    print(f"engine_decode: logits max|diff| dense vs tiered = "
+          f"{ed['logits_max_abs_diff']:.1e} "
+          f"[{'OK' if parity_ok else 'NOT BIT-IDENTICAL'}]")
+    return ran_ok and meta_ok and parity_ok
+
+
+_CHECKS = {"serve_decode": _check_serve, "engine_decode": _check_engine}
+
+
+def check(path: str = "BENCH_smoke.json",
+          sections: tuple[str, ...] = ("serve_decode",
+                                       "engine_decode")) -> int:
+    try:
+        with open(path) as f:
+            payload = json.load(f)
+    except OSError as e:
+        print(f"check_bench: cannot read {path}: {e}", file=sys.stderr)
+        return 1
+    ok = True
+    for name in sections:
+        section = payload.get(name)
+        if not section:
+            print(f"check_bench: no {name} section in {path} "
+                  "(run benchmarks.run --smoke first, or --serve/--engine "
+                  "to merge one section)", file=sys.stderr)
+            return 1
+        ok = _CHECKS[name](section) and ok
+    return 0 if ok else 1
 
 
 if __name__ == "__main__":
-    sys.exit(check(sys.argv[1] if len(sys.argv) > 1 else "BENCH_smoke.json"))
+    _path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_smoke.json"
+    _sections = tuple(sys.argv[2:]) or ("serve_decode", "engine_decode")
+    bad = [s for s in _sections if s not in _CHECKS]
+    if bad:
+        print(f"check_bench: unknown section(s) {bad}; have "
+              f"{sorted(_CHECKS)}", file=sys.stderr)
+        sys.exit(2)
+    sys.exit(check(_path, _sections))

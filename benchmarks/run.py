@@ -6,13 +6,16 @@ detailed per-figure data lands in benchmarks/results/*.csv.
 
 Usage:
   PYTHONPATH=src python -m benchmarks.run [--quick] [--skip-sim] [--smoke]
-                                          [--policies] [--serve]
+                                          [--policies] [--serve] [--engine]
 
 ``--serve`` runs only the decode-step microbenchmark (legacy concat +
 re-translate-everything baseline vs the zero-copy cached split-pool path)
-and merges a ``serve_decode`` section into BENCH_smoke.json; ``--smoke``
-includes the same section.  ``benchmarks.check_bench`` gates CI on the
-cached path actually beating the baseline it was measured against.
+and merges a ``serve_decode`` section into BENCH_smoke.json; ``--engine``
+does the same for the FULL-MODEL decode loop (dense vs tiered KV backend,
+``engine_decode`` section, including the bit-identity check the gate
+enforces); ``--smoke`` includes both sections.  ``benchmarks.check_bench``
+gates CI on the cached path actually beating the baseline it was measured
+against and on the tiered backend's logits parity.
 """
 
 from __future__ import annotations
@@ -127,6 +130,87 @@ def _serve_decode_section() -> tuple[list[dict], dict]:
     return rows, section
 
 
+def _engine_decode_section() -> tuple[list[dict], dict]:
+    """Full-model decode-loop benchmark: the smoke transformer decoded
+    through the two KV backends (``models.kv_backend``) at ragged lane
+    positions —
+
+      dense_backend   contiguous per-layer caches (the default)
+      tiered_backend  one Trimma two-tier store per attention layer
+                      (cached device table + split-pool kernel)
+
+    Reports tokens/s (min-of-interleaved-batches, the robust floor) and
+    the tiered metadata counters, plus the max |logits| difference
+    between the backends over the measured stream — the translation must
+    be invisible, so the gate (``check_bench``) requires exactly 0."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs import get_config, reduce_for_smoke
+    from repro.models import decode_step, forward, init_params
+    from repro.models.kv_backend import DenseBackend, TieredBackend
+
+    cfg = reduce_for_smoke(get_config("llama3-8b"))
+    params = init_params(cfg, jax.random.key(0))
+    B, max_len, page_tokens = 4, 128, 8
+    backends = {
+        "dense_backend": DenseBackend(cfg),
+        "tiered_backend": TieredBackend(cfg, B, max_len,
+                                        page_tokens=page_tokens,
+                                        fast_data_slots=16),
+    }
+    rng = np.random.default_rng(0)
+    lens = [17, 33, 9, 25]                    # ragged prefill per lane
+    prompts = [
+        forward(cfg, params,
+                {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (1, L)),
+                                       jnp.int32)}, collect_cache=True)[2]
+        for L in lens]                        # same K/V for both backends
+    setups, streams = {}, {}
+    for name, be in backends.items():
+        step = jax.jit(lambda p, s, t, be=be: decode_step(cfg, p, s, t,
+                                                          backend=be))
+        st = be.init_state(B, max_len)
+        for lane, (L, (k, v)) in enumerate(zip(lens, prompts)):
+            st = be.write_prefill(st, lane, k[:, 0], v[:, 0], L)
+        tok = jnp.zeros((B,), jnp.int32)
+        logits = None
+        for _ in range(8):                    # warm into steady state
+            logits, st = step(params, st, tok)
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        streams[name] = np.asarray(logits)
+        setups[name] = (step, st, tok)
+
+    parity = float(np.abs(streams["dense_backend"]
+                          - streams["tiered_backend"]).max())
+    times = {name: [] for name in setups}
+    for _ in range(8):                        # interleaved min-of-batches
+        for name, (step, st, tok) in setups.items():
+            t0 = time.perf_counter()
+            s, t = st, tok
+            for _ in range(8):
+                logits, s = step(params, s, t)
+            jax.block_until_ready(logits)
+            times[name].append((time.perf_counter() - t0) / 8 * 1e6)
+    rows, section = [], {}
+    for name in backends:
+        us = min(times[name])
+        section[name] = dict(us_per_step=us, tokens_per_s=B * 1e6 / us)
+        rows.append(dict(name=f"engine_decode_{name}", us_per_call=us,
+                         derived=f"{B * 1e6 / us:.0f}tok/s"))
+    tb = backends["tiered_backend"]
+    _, st_t, _ = setups["tiered_backend"]
+    section["tiered_backend"].update(
+        {k: v for k, v in tb.counters(st_t).items()
+         if k in ("lookups", "dev_hits", "migrations", "demotions")})
+    section["logits_max_abs_diff"] = parity
+    section["config"] = dict(
+        arch=cfg.name, n_layers=cfg.n_layers, batch=B, max_len=max_len,
+        page_tokens=page_tokens, prefill_lens=lens)
+    return rows, section
+
+
 def serve(out_path: str = "BENCH_smoke.json") -> str:
     """Run only the decode-step microbenchmark and merge its
     ``serve_decode`` section into ``out_path`` (creating the file if it
@@ -146,6 +230,28 @@ def serve(out_path: str = "BENCH_smoke.json") -> str:
         print(f"{row['name']},{row['us_per_call']:.1f},{row['derived']}")
     print(f"serve_decode_speedup,0,"
           f"{section['speedup_cached_vs_concat']:.2f}x")
+    return out_path
+
+
+def engine(out_path: str = "BENCH_smoke.json") -> str:
+    """Run only the full-model engine-decode benchmark and merge its
+    ``engine_decode`` section into ``out_path`` (creating the file if it
+    does not exist — the section is self-contained)."""
+    rows, section = _engine_decode_section()
+    payload = {}
+    if os.path.exists(out_path):
+        with open(out_path) as f:
+            payload = json.load(f)
+    payload["engine_decode"] = section
+    payload.setdefault("rows", [])
+    payload["rows"] = [r for r in payload["rows"]
+                       if not r["name"].startswith("engine_decode_")] + rows
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+    for row in rows:
+        print(f"{row['name']},{row['us_per_call']:.1f},{row['derived']}")
+    print(f"engine_decode_parity,0,"
+          f"{section['logits_max_abs_diff']:.1e}")
     return out_path
 
 
@@ -249,8 +355,14 @@ def smoke(out_path: str = "BENCH_smoke.json") -> str:
     serve_rows, serve_section = _serve_decode_section()
     rows.extend(serve_rows)
 
+    # full-model decode loop: dense vs tiered KV backend (check_bench
+    # additionally gates on exact logits parity between the two)
+    engine_rows, engine_section = _engine_decode_section()
+    rows.extend(engine_rows)
+
     payload = {"rows": rows, "sweep": sweep, "policy_sweep": policy_sweep,
                "serve_decode": serve_section,
+               "engine_decode": engine_section,
                "config": dict(fast_total_blocks=512, ratio=8, n_sets=4,
                               trace_len=4096, workloads=wls,
                               policies=["threshold"] + pols)}
@@ -274,6 +386,10 @@ def main() -> None:
     ap.add_argument("--serve", action="store_true",
                     help="decode-step microbenchmark only; merges a "
                          "serve_decode section into BENCH_smoke.json")
+    ap.add_argument("--engine", action="store_true",
+                    help="full-model dense-vs-tiered decode loop only; "
+                         "merges an engine_decode section into "
+                         "BENCH_smoke.json")
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
@@ -281,6 +397,11 @@ def main() -> None:
     if args.serve:
         path = serve()
         print(f"serve_json,0,\"{path}\"")
+        return
+
+    if args.engine:
+        path = engine()
+        print(f"engine_json,0,\"{path}\"")
         return
 
     if args.smoke:

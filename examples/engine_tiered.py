@@ -1,0 +1,63 @@
+"""Full-model tiered serving: the engine decoding a whole transformer
+through one Trimma-managed two-tier KV store per attention layer.
+
+Every request's prompt is really prefilled (one forward pass, its K/V
+pages land in the slow pool), lanes decode at independent ragged
+positions, the migration scheduler runs between steps, and a finished
+request's pages leave the metadata the moment its lane recycles.  The
+same request mix is decoded once per backend — the tiered token streams
+must match the dense ones exactly, because the logits are bit-identical.
+
+    PYTHONPATH=src python examples/engine_tiered.py
+"""
+import sys
+sys.path.insert(0, "src")
+
+import time
+
+import numpy as np
+import jax
+
+from repro.configs import get_config, reduce_for_smoke
+from repro.models import init_params
+from repro.serve.engine import Engine, EngineConfig, Request
+
+cfg = reduce_for_smoke(get_config("llama3-8b"))
+params = init_params(cfg, jax.random.key(0))
+
+
+def request_mix():
+    rng = np.random.default_rng(0)
+    return [Request(rid=rid,
+                    prompt=rng.integers(0, cfg.vocab, size=3 + rid % 4),
+                    max_new=6 + 4 * (rid % 3))
+            for rid in range(6)]
+
+
+streams, walls = {}, {}
+for backend in ("dense", "tiered"):
+    eng = Engine(cfg, params, EngineConfig(
+        batch=2, max_len=64, backend=backend,
+        page_tokens=8, fast_data_slots=8, maintain_every=4))
+    for r in request_mix():
+        eng.submit(r)
+    t0 = time.time()
+    done = eng.run()
+    walls[backend] = time.time() - t0
+    streams[backend] = {r.rid: r.tokens for r in done}
+    print(f"=== backend={backend}: {len(done)} requests, "
+          f"{eng.steps} decode steps, {walls[backend]:.2f}s wall ===")
+    for r in sorted(done, key=lambda r: r.rid):
+        print(f"  req {r.rid}: prompt {len(r.prompt):2d} tok -> "
+              f"{len(r.tokens):2d} new, latency {r.latency * 1e3:7.1f} ms, "
+              f"tokens {r.tokens[:6]}...")
+    if backend == "tiered":
+        c = eng.counters
+        print(f"  metadata: lookups={c['lookups']} dev_hits={c['dev_hits']} "
+              f"migrations={c['migrations']} demotions={c['demotions']} "
+              f"promo_bytes={c['promo_bytes']} demo_bytes={c['demo_bytes']}")
+        print(f"  releases on lane recycle: {eng.releases}")
+
+assert streams["dense"] == streams["tiered"], \
+    "tiered decode diverged from dense — the translation must be invisible"
+print("\ntiered token streams identical to dense: OK")

@@ -20,6 +20,12 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--backend", choices=("dense", "tiered"),
+                    default="dense",
+                    help="KV backend: dense caches or per-layer Trimma "
+                         "tiered stores (identical tokens, bit for bit)")
+    ap.add_argument("--policy", default=None,
+                    help="core/policy preset for --backend tiered")
     args = ap.parse_args()
 
     import jax
@@ -33,8 +39,13 @@ def main():
     if cfg.is_encoder:
         raise SystemExit(f"{cfg.name} is encoder-only: no decode serving")
     params = init_params(cfg, jax.random.key(0))
-    eng = Engine(cfg, params, EngineConfig(batch=args.batch,
-                                           max_len=args.max_len))
+    try:
+        eng = Engine(cfg, params, EngineConfig(batch=args.batch,
+                                               max_len=args.max_len,
+                                               backend=args.backend,
+                                               policy=args.policy))
+    except NotImplementedError as e:
+        raise SystemExit(f"{cfg.name}: {e}")
     rng = np.random.default_rng(0)
     t0 = time.time()
     for rid in range(args.requests):
@@ -46,6 +57,8 @@ def main():
     tok = sum(len(r.tokens) for r in done)
     print(f"served {len(done)} requests, {tok} tokens in {dt:.1f}s "
           f"({tok/dt:.1f} tok/s)")
+    if eng.counters:
+        print(f"tiered counters: {eng.counters}")
 
 
 if __name__ == "__main__":

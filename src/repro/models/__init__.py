@@ -1,11 +1,14 @@
 """Model zoo: all assigned architectures on a scan-over-layers skeleton."""
 
+from .kv_backend import (DenseBackend, KVBackend, TieredBackend,
+                         make_backend)
 from .model import (abstract_decode_state, abstract_params_and_axes,
                     decode_step, forward, init_decode_state, init_params,
                     init_params_and_axes, input_specs, loss_fn, prefill)
 
 __all__ = [
-    "abstract_decode_state", "abstract_params_and_axes", "decode_step",
-    "forward", "init_decode_state", "init_params", "init_params_and_axes",
-    "input_specs", "loss_fn", "prefill",
+    "DenseBackend", "KVBackend", "TieredBackend", "abstract_decode_state",
+    "abstract_params_and_axes", "decode_step", "forward",
+    "init_decode_state", "init_params", "init_params_and_axes",
+    "input_specs", "loss_fn", "make_backend", "prefill",
 ]

@@ -200,44 +200,37 @@ def image_kv(p, img_embeds, cfg: ArchConfig):
 
 
 # ---------------------------------------------------------------------------
-# decode: one new token against a KV cache
+# decode: one new token per lane against a pluggable KV backend
 # ---------------------------------------------------------------------------
 
-def decode_self_attention(p, x, cfg: ArchConfig, cache_k, cache_v, pos,
-                          *, window=0, kernel=None, ring: bool = False):
-    """x [B,1,d]; cache_k/v [B,S,KV,hd]; pos scalar int32 (current length).
+def block_decode_attention(p, x, cfg: ArchConfig, cache, pos, backend,
+                           *, window=0, ring: bool = False):
+    """One block's decode attention through a ``KVBackend``.
+
+    x [B,1,d]; ``cache`` is this layer's backend-owned slice; ``pos``
+    [B] int32 — each lane's current length (ragged positions supported;
+    a negative position marks an idle lane: nothing written, nothing
+    read).  QKV + RoPE and the output projection live here; the storage
+    round-trip (``append`` the new K/V, ``attend`` the query against
+    everything stored) is the backend's.
 
     ``window`` may be a traced int32 (hybrid archs switch SWA/global per
-    scanned layer); 0 means unlimited lookback.
-
-    ``ring=True`` (hillclimb, EXPERIMENTS.md §Perf): the cache is a ring
-    buffer of the SWA window — slot s holds absolute position
+    scanned layer); 0 means unlimited lookback.  ``ring=True``
+    (hillclimb, EXPERIMENTS.md §Perf): the dense cache is a ring buffer
+    of the SWA window — slot s holds absolute position
     ``pos - ((pos - s) mod S)``; reads are masked by the true window, so
-    the math is identical to the full-length cache while the memory sweep
-    shrinks from context-length to window-length.
+    the math is identical to the full-length cache while the memory
+    sweep shrinks from context-length to window-length.
 
-    Returns (y [B,1,d], new_cache_k, new_cache_v).
-    (The tiered/paged variant lives in repro.tiered.kvcache.)
+    Returns (y [B,1,d], new cache slice).
     """
-    positions = jnp.full((x.shape[0], 1), pos, jnp.int32)
+    positions = pos[:, None]                                   # [B, 1]
     q, k, v = _qkv(p, x, cfg, positions)
-    S = cache_k.shape[1]
-    write = (pos % S) if ring else pos
-    cache_k = jax.lax.dynamic_update_slice_in_dim(
-        cache_k, k.astype(cache_k.dtype), write, axis=1)
-    cache_v = jax.lax.dynamic_update_slice_in_dim(
-        cache_v, v.astype(cache_v.dtype), write, axis=1)
-    window = jnp.asarray(window, jnp.int32)
-    ki = jnp.arange(S)
-    if ring:
-        abs_pos = pos - ((pos - ki) % S)
-        ok = (abs_pos >= 0) & ((window == 0) | (abs_pos > pos - window))
-    else:
-        ok = (ki <= pos) & ((window == 0) | (ki > pos - window))
-    mask = jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)[None, :]  # [1,S]
-    if kernel is not None:
-        out = kernel(q, cache_k, cache_v, pos=pos, window=window)
-    else:
-        out = _sdpa(q, cache_k.astype(q.dtype), cache_v.astype(q.dtype), mask)
-    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
-    return y, cache_k, cache_v
+    B, _, H, hd = q.shape
+    KV = k.shape[2]
+    cache = backend.append(cache, k[:, 0], v[:, 0], pos, ring=ring)
+    out, cache = backend.attend(cache, q.reshape(B, KV, H // KV, hd), pos,
+                                window=window, ring=ring)
+    y = jnp.einsum("bshk,hkd->bsd", out.reshape(B, 1, H, hd),
+                   p["wo"].astype(x.dtype))
+    return y, cache

@@ -1,0 +1,272 @@
+"""Pluggable KV-cache backends for the full-model decode loop.
+
+The decode stack (``transformer.decode_step`` -> ``_block_decode`` ->
+``attention.block_decode_attention``) speaks to its KV storage only
+through the ``KVBackend`` protocol: per layer, ``append`` one token's
+K/V at each lane's position, then ``attend`` a query against everything
+stored so far.  Two implementations:
+
+  DenseBackend   today's contiguous ``DecodeState`` caches
+                 ([L, B, max_len, KV, hd] per layer under the layer
+                 scan), bit-for-bit the pre-refactor numerics;
+  TieredBackend  one Trimma-managed two-tier store per attention layer
+                 (``tiered.kvcache.TieredState`` stacked on a leading
+                 layer axis, sliced by the same layer scan) — appends
+                 route to each page's current tier, reads go through the
+                 cached device table into the split-pool paged-attention
+                 kernel (``serve/tiered.attend``), and ``maintain`` /
+                 ``release`` run the migration scheduler and lane
+                 recycling across every layer in one vmapped pass.
+
+The translation must be invisible to the math: for the same token
+stream at the same (per-lane, ragged) positions the two backends
+produce bit-identical logits — tests/test_engine.py pins it under every
+policy preset.
+
+``pos`` is per-lane everywhere ([B] int32; scalars broadcast): lanes
+decode at independent positions, so continuous batching never waits for
+the batch to align.  A negative position marks an idle lane — both
+backends drop its append and mask its read to nothing.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Protocol
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+from . import attention as attn
+
+
+class KVBackend(Protocol):
+    """Per-layer KV-cache interface consumed by the decode layer scan.
+
+    ``cache`` is one layer's slice of ``DecodeState.caches`` (the scan
+    hands each layer its own slice); its concrete pytree type belongs to
+    the backend.  Both methods must be pure and jit-able.
+    """
+
+    def init_state(self, batch: int, max_len: int):
+        """Fresh ``DecodeState`` (``pos`` [B] int32 zeros, layer-stacked
+        caches)."""
+        ...
+
+    def append(self, cache, k, v, pos, *, ring: bool = False):
+        """Write one token's K/V per lane.  k, v [B, KV, hd] (post-RoPE);
+        pos [B].  Lanes with ``pos < 0`` (idle) or past capacity write
+        nothing.  Returns the updated cache slice."""
+        ...
+
+    def attend(self, cache, q, pos, *, window=0, ring: bool = False):
+        """q [B, KV, G, hd], pos [B] -> (out [B, KV, G, hd], cache).
+        Attends keys at positions <= pos per lane (SWA-masked when
+        ``window`` > 0); may update the cache slice (the tiered backend
+        records hotness and fills its device table)."""
+        ...
+
+
+# ---------------------------------------------------------------------------
+# dense: the contiguous per-layer cache (pre-refactor numerics)
+# ---------------------------------------------------------------------------
+
+class DenseBackend:
+    """Contiguous [B, max_len, KV, hd] caches per layer — the default.
+
+    ``append``/``attend`` reproduce the fused pre-refactor
+    ``decode_self_attention`` bit for bit (the scatter writes the same
+    values the dynamic-update-slice wrote; the per-lane mask rows are
+    the old shared-position mask when all lanes agree).  The cache slice
+    is a dict holding at least ``{"k", "v"}``; extra keys (hybrid SSM
+    state) pass through untouched.
+    """
+
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+
+    def init_state(self, batch: int, max_len: int):
+        from . import transformer
+        return transformer.init_decode_state(self.cfg, batch, max_len)
+
+    def is_ring(self, cache) -> bool:
+        sw = self.cfg.sliding_window
+        return sw > 0 and cache["k"].shape[1] <= sw
+
+    def append(self, cache, k, v, pos, *, ring: bool = False):
+        ck, cv = cache["k"], cache["v"]
+        B, S = ck.shape[:2]
+        write = pos % S if ring else pos
+        # idle (pos < 0) and past-capacity lanes route to an OOB sentinel
+        # (traced negative indices wrap in JAX — they must be remapped)
+        write = jnp.where((pos >= 0) & (write >= 0) & (write < S), write, S)
+        lane = jnp.arange(B)
+        ck = ck.at[lane, write].set(k.astype(ck.dtype), mode="drop")
+        cv = cv.at[lane, write].set(v.astype(cv.dtype), mode="drop")
+        return {**cache, "k": ck, "v": cv}
+
+    def attend(self, cache, q, pos, *, window=0, ring: bool = False):
+        B, KV, G, hd = q.shape
+        ck, cv = cache["k"], cache["v"]
+        S = ck.shape[1]
+        ki = jnp.arange(S)[None, :]
+        pb = pos[:, None]
+        window = jnp.asarray(window, jnp.int32)
+        if ring:
+            # idle lanes (pb < 0) fall out via abs_pos < 0
+            abs_pos = pb - ((pb - ki) % S)
+            ok = (abs_pos >= 0) & ((window == 0) | (abs_pos > pb - window))
+        else:
+            ok = (ki <= pb) & ((window == 0) | (ki > pb - window))
+        mask = jnp.where(ok, 0.0, attn.NEG_INF).astype(jnp.float32)
+        out = attn._sdpa(q.reshape(B, 1, KV * G, hd), ck.astype(q.dtype),
+                         cv.astype(q.dtype), mask[:, None, None, None, :])
+        return out.reshape(B, KV, G, hd), cache
+
+    # engine hooks: nothing to migrate or recycle in a dense cache — the
+    # per-lane position mask makes a refilled lane's stale rows invisible
+    def maintain(self, state):
+        return state
+
+    def release(self, state, lane):
+        return state
+
+    def write_prefill(self, state, lane, k_layers, v_layers, length):
+        """Install a prompt's K/V into one lane: k/v [L, P, KV, hd]
+        (post-RoPE rows 0..P-1; only rows < ``length`` are real — later
+        rows are pad garbage the position mask hides until the decode
+        appends overwrite them).  Sets ``pos[lane] = length``."""
+        c = state.caches
+        P = k_layers.shape[1]
+        ck = c["k"].at[:, lane, :P].set(k_layers.astype(c["k"].dtype))
+        cv = c["v"].at[:, lane, :P].set(v_layers.astype(c["v"].dtype))
+        return state._replace(pos=state.pos.at[lane].set(length),
+                              caches={**c, "k": ck, "v": cv})
+
+
+# ---------------------------------------------------------------------------
+# tiered: one Trimma two-tier store per attention layer
+# ---------------------------------------------------------------------------
+
+class TieredBackend:
+    """Per-layer ``TieredState`` stacked on a leading layer axis.
+
+    The decode layer scan slices one layer's store per step exactly as
+    it slices the dense caches; inside the slice, ``append`` is
+    ``tiered.kvcache.append_token`` (routes to the page's current tier)
+    and ``attend`` is ``serve/tiered.attend`` (cached device table ->
+    split-pool paged attention, ragged ``seq_lens = pos + 1``).
+    ``maintain``/``release``/``write_prefill`` vmap the corresponding
+    single-store op over the layer axis.
+
+    Only plain-KV decoder families qualify (no sliding window, no
+    recurrent side state): the paged kernel has no window semantics and
+    the tiers hold nothing but KV pages.
+    """
+
+    def __init__(self, cfg: ArchConfig, batch: int, max_len: int, *,
+                 page_tokens: int = 16, fast_data_slots: int = 16,
+                 policy=None, impl: str = "auto", walk_impl: str = "auto",
+                 gather_impl: str = "auto"):
+        from repro.tiered import kvcache as tk
+        if cfg.family not in ("dense", "moe"):
+            raise NotImplementedError(
+                f"TieredBackend supports plain-KV decoder families; "
+                f"got family={cfg.family!r}")
+        if cfg.sliding_window:
+            raise NotImplementedError(
+                "TieredBackend has no sliding-window semantics "
+                "(the paged kernel reads every live page)")
+        self.cfg = cfg
+        self.impl = impl
+        self.n_layers = cfg.n_layers
+        self.tcfg = tk.TieredConfig(
+            n_seqs=batch,
+            max_pages_per_seq=-(-max_len // page_tokens),
+            page_tokens=page_tokens,
+            n_kv_heads=cfg.n_kv_heads,
+            head_dim=cfg.hd,
+            fast_data_slots=fast_data_slots,
+            policy=policy,
+            dtype=cfg.dtype,
+            walk_impl=walk_impl,
+            gather_impl=gather_impl,
+        )
+        self._seq_ids = jnp.arange(batch, dtype=jnp.int32)
+
+    def init_state(self, batch: int, max_len: int):
+        from . import transformer
+        from repro.tiered import kvcache as tk
+        assert batch == self.tcfg.n_seqs
+        one = tk.init_state(self.tcfg)
+        stacked = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (self.n_layers,) + x.shape), one)
+        return transformer.DecodeState(
+            jnp.zeros((batch,), jnp.int32), stacked)
+
+    def is_ring(self, cache) -> bool:
+        return False
+
+    def append(self, cache, k, v, pos, *, ring: bool = False):
+        from repro.tiered import kvcache as tk
+        return tk.append_token(self.tcfg, cache, self._seq_ids, k, v, pos)
+
+    def attend(self, cache, q, pos, *, window=0, ring: bool = False):
+        from repro.serve import tiered as srv
+        # idle lanes (pos < 0) read nothing: seq_lens 0 masks every page
+        seq_lens = jnp.maximum(pos + 1, 0)
+        return srv.attend(self.tcfg, cache, q, seq_lens, impl=self.impl)
+
+    def maintain(self, state, max_moves: int | None = None):
+        """One migration-scheduler pass per layer (vmapped): bounded
+        promotion + demotion + epoch decay, off the critical path."""
+        from repro.tiered import kvcache as tk
+        caches = jax.vmap(
+            lambda st: tk.run_scheduler(self.tcfg, st,
+                                        max_moves=max_moves))(state.caches)
+        return state._replace(caches=caches)
+
+    def release(self, state, lane):
+        """Drop one lane's pages from every layer's metadata (lane
+        recycle; ``pos`` untouched — the caller re-prefills)."""
+        from repro.tiered import kvcache as tk
+        caches = jax.vmap(
+            lambda st: tk.release_seq(self.tcfg, st, lane))(state.caches)
+        return state._replace(caches=caches)
+
+    def write_prefill(self, state, lane, k_layers, v_layers, length):
+        """Batched prompt ingest: each layer's prompt K/V pages land in
+        the slow pool in one pass (``tiered.kvcache.prefill_tokens``).
+        Precondition: the lane was released (identity mapping) — the
+        engine releases every lane before prefilling it."""
+        from repro.tiered import kvcache as tk
+        caches = jax.vmap(
+            lambda st, k, v: tk.prefill_tokens(self.tcfg, st, lane, k, v,
+                                               length)
+        )(state.caches, k_layers, v_layers)
+        return state._replace(pos=state.pos.at[lane].set(length),
+                              caches=caches)
+
+    def counters(self, state) -> dict:
+        """Aggregate per-layer counters (summed over the layer axis)."""
+        c, t = state.caches, self.tcfg
+        tot = lambda x: int(jnp.sum(x))  # noqa: E731
+        return dict(
+            lookups=tot(c.lookups), dev_hits=tot(c.dev_hits),
+            irc_hits=tot(c.irc_hits), migrations=tot(c.migrations),
+            demotions=tot(c.demotions), forced_evict=tot(c.forced_evict),
+            promo_bytes=tot(c.promo_pages) * t.page_bytes,
+            demo_bytes=tot(c.demo_pages) * t.page_bytes)
+
+
+def make_backend(cfg: ArchConfig, kind: str, batch: int, max_len: int,
+                 **tiered_kw: Any) -> KVBackend:
+    """Backend factory for the serving engine: ``kind`` is "dense" or
+    "tiered"; ``tiered_kw`` forwards geometry/policy knobs to
+    ``TieredBackend``."""
+    if kind == "dense":
+        return DenseBackend(cfg)
+    if kind == "tiered":
+        return TieredBackend(cfg, batch, max_len, **tiered_kw)
+    raise ValueError(f"unknown KV backend {kind!r} (want dense|tiered)")

@@ -338,8 +338,10 @@ def lm_loss(cfg: ArchConfig, params, batch, *, remat: str = "none"):
 # ---------------------------------------------------------------------------
 
 class DecodeState(NamedTuple):
-    pos: jnp.ndarray          # scalar int32: tokens already in cache
-    caches: Any               # per-family pytree, layer-stacked
+    pos: jnp.ndarray          # [B] int32: tokens already in cache, per
+                              # lane (ragged — lanes decode independently;
+                              # negative marks an idle lane)
+    caches: Any               # backend-owned pytree, layer-stacked
 
 
 def _ring_cache_len(cfg: ArchConfig, max_len: int) -> int:
@@ -383,11 +385,12 @@ def init_decode_state(cfg: ArchConfig, batch: int, max_len: int) -> DecodeState:
         }
     else:
         caches = {"k": kv(), "v": kv()}
-    return DecodeState(jnp.zeros((), jnp.int32), caches)
+    return DecodeState(jnp.zeros((batch,), jnp.int32), caches)
 
 
-def _block_decode(cfg: ArchConfig, p, x, cache, pos, flag):
-    """One block, one token.  cache: this layer's slice."""
+def _block_decode(cfg: ArchConfig, p, x, cache, pos, flag, backend):
+    """One block, one token per lane.  cache: this layer's backend-owned
+    slice; pos [B] per-lane positions."""
     h = rms_norm(x, p["norm1"], cfg.rms_eps)
     if cfg.family == "ssm":
         def do_s(h):
@@ -408,12 +411,9 @@ def _block_decode(cfg: ArchConfig, p, x, cache, pos, flag):
         ring = False
     else:
         window = cfg.sliding_window
-        ring = (cfg.sliding_window > 0
-                and cache["k"].shape[1] <= cfg.sliding_window)
-    a, ck, cv = attn.decode_self_attention(
-        p["attn"], h, cfg, cache["k"], cache["v"], pos, window=window,
-        ring=ring)
-    new_cache = {**cache, "k": ck, "v": cv}
+        ring = backend.is_ring(cache)
+    a, new_cache = attn.block_decode_attention(
+        p["attn"], h, cfg, cache, pos, backend, window=window, ring=ring)
     if cfg.family == "hybrid":
         xz = h @ p["ssm"]["in_proj"].astype(h.dtype)
         s_out, s_state = ssm_mod.ssm_step(p["ssm"], xz, cache["ssm"], cfg)
@@ -436,19 +436,29 @@ def _mlstm_step_tuple(p, x, cache):
     return out, (st["C"], st["n"], st["m"])
 
 
-def decode_step(cfg: ArchConfig, params, state: DecodeState, tokens):
-    """tokens [B] int32 -> (logits [B, vocab], new state)."""
+def decode_step(cfg: ArchConfig, params, state: DecodeState, tokens,
+                backend=None):
+    """tokens [B] int32 -> (logits [B, vocab], new state).
+
+    ``backend`` selects the KV storage (``models.kv_backend``): None /
+    ``DenseBackend`` keeps today's contiguous caches; ``TieredBackend``
+    decodes every attention layer through its own Trimma-managed
+    two-tier store — same logits, bit for bit."""
+    if backend is None:
+        from .kv_backend import DenseBackend
+        backend = DenseBackend(cfg)
     x = jnp.take(params["embed"], tokens[:, None], axis=0)
     x = logical_constraint(x, ("batch", None, "embed_act"))
     pos = state.pos
     flags = jnp.asarray(layer_flags(cfg))
 
     if cfg.family == "vlm":
-        x, caches = _vlm_decode(cfg, params, x, state)
+        x, caches = _vlm_decode(cfg, params, x, state, backend)
     else:
         def body(x, layer):
             p, flag, cache = layer
-            x, new_cache = _block_decode(cfg, p, x, cache, pos, flag)
+            x, new_cache = _block_decode(cfg, p, x, cache, pos, flag,
+                                         backend)
             return x, new_cache
 
         x, caches = jax.lax.scan(body, x,
@@ -461,7 +471,7 @@ def decode_step(cfg: ArchConfig, params, state: DecodeState, tokens):
     return logits, DecodeState(pos + 1, caches)
 
 
-def _vlm_decode(cfg, params, x, state: DecodeState):
+def _vlm_decode(cfg, params, x, state: DecodeState, backend):
     pos = state.pos
 
     def super_block(x, layer):
@@ -469,7 +479,8 @@ def _vlm_decode(cfg, params, x, state: DecodeState):
 
         def inner(x, l):
             p, k, v = l
-            xx, cache = _block_decode(cfg, p, x, {"k": k, "v": v}, pos, False)
+            xx, cache = _block_decode(cfg, p, x, {"k": k, "v": v}, pos,
+                                      False, backend)
             return xx, (cache["k"], cache["v"])
 
         x, (nk, nv) = jax.lax.scan(inner, x, (p_self, ck, cv),
@@ -527,12 +538,12 @@ def prefill(cfg: ArchConfig, params, batch, max_len: int | None = None):
             "ik": ik.astype(state.caches["ik"].dtype),
             "iv": iv.astype(state.caches["iv"].dtype),
         }
-        return logits, DecodeState(jnp.int32(S), new)
+        return logits, DecodeState(jnp.full((B,), S, jnp.int32), new)
     if caches != () and cfg.family != "audio":
         k, v = caches
         new = {
             "k": state.caches["k"].at[:, :, :S].set(k.astype(state.caches["k"].dtype)),
             "v": state.caches["v"].at[:, :, :S].set(v.astype(state.caches["v"].dtype)),
         }
-        return logits, DecodeState(jnp.int32(S), new)
-    return logits, DecodeState(jnp.int32(S), state.caches)
+        return logits, DecodeState(jnp.full((B,), S, jnp.int32), new)
+    return logits, DecodeState(jnp.full((B,), S, jnp.int32), state.caches)

@@ -79,8 +79,10 @@ def make_tiered_decode_step(tcfg, *, path: str = "zero_copy",
                    benchmark; pair with ``cache_device_table=False``).
 
     Returned signature: step(state, q, k_new, v_new, pos) -> (out, state)
-    with q [B, KV, G, hd], k_new/v_new [B, KV, hd] and ``pos`` the shared
-    decode position (seq_lens becomes pos + 1).
+    with q [B, KV, G, hd], k_new/v_new [B, KV, hd] and ``pos`` the decode
+    position — a shared scalar or a per-lane [B] vector (ragged lanes
+    decode at independent positions; seq_lens becomes pos + 1, clamped at
+    0 so a negative/idle lane reads nothing).
     """
     import jax.numpy as jnp
 
@@ -91,8 +93,10 @@ def make_tiered_decode_step(tcfg, *, path: str = "zero_copy",
     fn = srv.attend if path == "zero_copy" else srv.attend_concat
 
     def step(st, q, k_new, v_new, pos):
+        pos = jnp.asarray(pos, jnp.int32)
         st = tk.append_token(tcfg, st, seq_ids, k_new, v_new, pos)
-        seq_lens = jnp.full((tcfg.n_seqs,), pos + 1, jnp.int32)
+        seq_lens = jnp.broadcast_to(jnp.maximum(pos + 1, 0),
+                                    (tcfg.n_seqs,))
         return fn(tcfg, st, q, seq_lens, impl=impl)
 
     return jax.jit(step)

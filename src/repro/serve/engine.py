@@ -1,19 +1,32 @@
-"""Batched serving engine: request scheduling + decode loop.
+"""Batched serving engine: request scheduling + full-model decode loop.
 
 Production concerns covered here:
   * continuous batching: a fixed-width decode batch; finished/empty lanes
     are refilled from the request queue each step (no head-of-line block);
+  * real prefill: a refilled lane's prompt runs through ``forward``
+    (collect_cache) once and its K/V land in the lane's cache — dense
+    rows or tiered slow-pool pages (``tiered.kvcache.prefill_tokens``)
+    — so every prompt token conditions generation, at prefill cost
+    O(prompt) instead of O(prompt) decode steps;
+  * ragged lanes: ``DecodeState.pos`` is per-lane, so each lane decodes
+    at its own position; idle lanes sit at pos = -1 and neither write
+    nor read (nor heat the tiered hotness tracker);
   * straggler mitigation: requests are bucketed by remaining length so one
-    long sequence cannot pin the whole batch (the scheduler prefers filling
-    a lane with a request whose target length matches the batch's bucket);
-  * tiered KV serving: ``TieredServer`` drives the zero-copy decode step
-    (append -> cached-device-table lookup -> split-pool paged attention)
-    with ``maintain`` between steps and ``release`` on lane recycle, so a
-    finished request's pages leave the metadata structures the moment its
-    lane refills (the full-model decode path uses models.decode_step; the
-    single-attention-layer tiered integration is exercised in
-    examples/serve_tiered.py, tests/test_tiered_kv.py, tests/test_engine.py
-    and the ``serve_decode`` benchmark).
+    long sequence cannot pin the whole batch — the bucket anchors to the
+    first request of a batch wave and resets when the engine drains, so
+    it tracks the wave instead of whatever refilled last;
+  * tiered KV serving: ``EngineConfig(backend="tiered")`` decodes the
+    full transformer through one Trimma-managed two-tier store per
+    attention layer (``models.kv_backend.TieredBackend``), driving
+    step -> maintain -> release: the jitted zero-copy decode step per
+    token, the bounded migration scheduler between steps, and a batched
+    metadata release the moment a lane's request finishes — bit-identical
+    logits to the dense backend (tests/test_engine.py pins it under every
+    policy preset).
+
+``TieredServer`` below is the single-store driver for the same loop
+(used by the microbenchmarks and the kernel-level tests); ``Engine``
+composes the full model on top of it through the backend protocol.
 """
 
 from __future__ import annotations
@@ -28,7 +41,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
-from repro.models import decode_step, init_decode_state, prefill
+from repro.models import decode_step, forward
+from repro.models.kv_backend import TieredBackend, make_backend
 from repro.serve.decode import make_tiered_decode_step
 
 
@@ -38,8 +52,13 @@ class Request:
     prompt: np.ndarray            # [S] int32
     max_new: int
     arrived: float = 0.0
+    done_at: float = 0.0          # wall time the last token was decoded
     tokens: list = dataclasses.field(default_factory=list)
     done: bool = False
+
+    @property
+    def latency(self) -> float:
+        return self.done_at - self.arrived
 
 
 @dataclasses.dataclass
@@ -47,19 +66,27 @@ class EngineConfig:
     batch: int = 4
     max_len: int = 256
     bucket: int = 64              # straggler bucketing granularity
+    backend: str = "dense"        # KV backend: "dense" | "tiered"
+    # tiered-backend geometry / policy (ignored for dense)
+    page_tokens: int = 16
+    fast_data_slots: int = 16
+    policy: str | None = None     # core/policy preset name
+    maintain_every: int = 4       # migration-scheduler cadence (steps)
 
 
 class TieredServer:
     """Continuous tiered-KV decode driver: the serving glue between lane
-    scheduling and the Trimma-managed two-tier KV store.
+    scheduling and ONE Trimma-managed two-tier KV store (a single
+    attention layer's worth; ``Engine`` stacks one per layer through
+    ``TieredBackend``).
 
     One jitted zero-copy step per token (``serve.decode
     .make_tiered_decode_step``: append -> cached-table lookup ->
-    split-pool attention), ``maintain`` between steps (bounded
-    promotion/demotion, off the critical path), ``release`` when a lane's
-    request finishes and the lane is recycled — the freed pages drop out
-    of the iRT/iRC/device table in one batched pass, so a dead request
-    never occupies fast slots or metadata.
+    split-pool attention; ``pos`` may be a per-lane vector), ``maintain``
+    between steps (bounded promotion/demotion, off the critical path),
+    ``release`` when a lane's request finishes and the lane is recycled —
+    the freed pages drop out of the iRT/iRC/device table in one batched
+    pass, so a dead request never occupies fast slots or metadata.
     """
 
     def __init__(self, tcfg, *, path: str = "zero_copy",
@@ -74,7 +101,8 @@ class TieredServer:
         self.steps = 0
 
     def step(self, q, k_new, v_new, pos):
-        """One decode token for every lane; returns [B, KV, G, hd]."""
+        """One decode token for every lane (``pos`` scalar or [B]);
+        returns [B, KV, G, hd]."""
         out, self.state = self._step(self.state, q, k_new, v_new, pos)
         self.steps += 1
         return out
@@ -95,14 +123,60 @@ class TieredServer:
                     demo_bytes=int(s.demo_pages) * self.cfg.page_bytes)
 
 
-class Engine:
-    """Greedy-decode serving engine over a fixed-width batch."""
+_PREFILL_FAMILIES = ("dense", "moe")
 
-    def __init__(self, cfg: ArchConfig, params, ec: EngineConfig):
+
+class Engine:
+    """Greedy-decode serving engine over a fixed-width batch.
+
+    ``ec.backend`` selects the KV storage for the full model: "dense"
+    (default, contiguous caches) or "tiered" (per-layer Trimma stores;
+    same logits bit for bit).  A pre-built backend instance may be
+    injected via ``backend=`` for custom geometry/policy.
+    """
+
+    def __init__(self, cfg: ArchConfig, params, ec: EngineConfig,
+                 backend=None):
+        if cfg.family not in _PREFILL_FAMILIES:
+            raise NotImplementedError(
+                f"Engine prefill supports KV-cache families "
+                f"{_PREFILL_FAMILIES}; got {cfg.family!r}")
+        from repro.models.transformer import _ring_cache_len
+        if _ring_cache_len(cfg, ec.max_len) != ec.max_len:
+            raise NotImplementedError(
+                "Engine prefill writes prompt rows linearly and does not "
+                "support the ring-buffer window cache "
+                "(REPRO_WINDOW_CACHE=1)")
         self.cfg, self.params, self.ec = cfg, params, ec
         self.queue: deque[Request] = deque()
+        if backend is not None:
+            self.backend = backend
+        else:
+            kw = {}
+            if ec.backend == "tiered":
+                kw = dict(page_tokens=ec.page_tokens,
+                          fast_data_slots=ec.fast_data_slots)
+                if ec.policy is not None:
+                    from repro.core.policy import get_policy
+                    kw["policy"] = get_policy(ec.policy)
+            self.backend = make_backend(cfg, ec.backend, ec.batch,
+                                        ec.max_len, **kw)
+        self._tiered = isinstance(self.backend, TieredBackend)
         self._step = jax.jit(
-            lambda p, s, t: decode_step(cfg, p, s, t))
+            lambda p, s, t: decode_step(cfg, p, s, t, backend=self.backend))
+        if self._tiered:
+            self._maintain = jax.jit(self.backend.maintain)
+            self._release = jax.jit(self.backend.release)
+        self._prefill_fns: dict[int, Callable] = {}
+        self._set_pos = jax.jit(
+            lambda s, i, v: s._replace(pos=s.pos.at[i].set(v)))
+        self._mask_idle = jax.jit(
+            lambda s, m: s._replace(pos=jnp.where(m, -1, s.pos)))
+        self.active_bucket: int | None = None
+        self.releases = 0
+        self.steps = 0
+
+    # -- request intake / scheduling ------------------------------------
 
     def submit(self, req: Request):
         req.arrived = time.time()
@@ -121,57 +195,114 @@ class Engine:
                 return r
         return self.queue.popleft()
 
+    # -- prefill ---------------------------------------------------------
+
+    def _prefill_fn(self, P: int) -> Callable:
+        """Jitted per padded prompt length: one causal forward over the
+        padded context, then the backend installs the K/V rows/pages of
+        lane ``lane`` and sets ``pos[lane] = length`` (positions >=
+        ``length`` are pad garbage the per-lane mask hides until decode
+        appends overwrite them)."""
+        if P not in self._prefill_fns:
+            cfg, backend = self.cfg, self.backend
+
+            def fn(params, state, lane, tokens, length):
+                _, _, (k, v) = forward(cfg, params, {"tokens": tokens},
+                                       collect_cache=True)
+                return backend.write_prefill(state, lane, k[:, 0], v[:, 0],
+                                             length)
+
+            self._prefill_fns[P] = jax.jit(fn)
+        return self._prefill_fns[P]
+
+    def _prefill_lane(self, state, lane: int, req: Request):
+        """Install ``req``'s prompt into ``lane``; returns (state, the
+        token the first decode step consumes)."""
+        prompt = np.asarray(req.prompt, np.int32).reshape(-1)
+        assert prompt.size >= 1, "empty prompt"
+        ctx = prompt[:-1]
+        if ctx.size > self.ec.max_len - 1:
+            raise ValueError(
+                f"prompt ({prompt.size}) exceeds max_len ({self.ec.max_len})")
+        if ctx.size == 0:
+            state = self._set_pos(state, jnp.int32(lane), jnp.int32(0))
+            return state, int(prompt[-1])
+        # pad to a power of two (few jit keys), clamped to the cache
+        # capacity — the pad rows must still fit the lane
+        P = min(1 << (int(ctx.size) - 1).bit_length(), self.ec.max_len)
+        padded = np.zeros((1, P), np.int32)
+        padded[0, :ctx.size] = ctx
+        state = self._prefill_fn(P)(
+            self.params, state, jnp.int32(lane), jnp.asarray(padded),
+            jnp.int32(ctx.size))
+        return state, int(prompt[-1])
+
+    # -- decode loop ------------------------------------------------------
+
+    def _refill(self, state, tokens, lanes, finished):
+        """Recycle finished lanes (release their pages), fill empty lanes
+        from the queue (real prefill), park still-empty lanes at
+        pos = -1 so they neither write nor read nor heat anything."""
+        ec = self.ec
+        for i in range(ec.batch):
+            r = lanes[i]
+            if r is not None and r.done:
+                finished.append(r)
+                lanes[i] = None
+                if self._tiered:
+                    state = self._release(state, jnp.int32(i))
+                    self.releases += 1
+            if lanes[i] is None:
+                req = self._pick(self.active_bucket)
+                if req is None:
+                    continue
+                if self.active_bucket is None:
+                    self.active_bucket = req.max_new
+                lanes[i] = req
+                state, tok = self._prefill_lane(state, i, req)
+                tokens = tokens.at[i].set(tok)
+        idle = np.array([l is None for l in lanes])
+        if idle.any():
+            state = self._mask_idle(state, jnp.asarray(idle))
+        if idle.all() and not self.queue:
+            self.active_bucket = None       # the wave drained: re-anchor
+        return state, tokens
+
     def run(self, log: Callable[[str], None] = lambda s: None) -> list[Request]:
         ec = self.ec
         lanes: list[Request | None] = [None] * ec.batch
-        state = init_decode_state(self.cfg, ec.batch, ec.max_len)
+        state = self.backend.init_state(ec.batch, ec.max_len)
         tokens = jnp.zeros((ec.batch,), jnp.int32)
         finished: list[Request] = []
-        active_bucket = None
 
-        def refill(state, tokens):
-            nonlocal active_bucket
-            for i in range(ec.batch):
-                if lanes[i] is None or lanes[i].done:
-                    if lanes[i] is not None:
-                        finished.append(lanes[i])
-                        lanes[i] = None
-                    req = self._pick(active_bucket)
-                    if req is None:
-                        continue
-                    lanes[i] = req
-                    active_bucket = req.max_new
-                    # prefill this lane: replay prompt through decode steps
-                    # (single-lane prefill keeps the example simple; batch
-                    # prefill is models.prefill)
-                    for tok in req.prompt[:-1]:
-                        pass  # prompt replay folded into first decode below
-                    tokens = tokens.at[i].set(int(req.prompt[-1]))
-            return state, tokens
-
-        state, tokens = refill(state, tokens)
-        steps = 0
+        state, tokens = self._refill(state, tokens, lanes, finished)
         while any(l is not None for l in lanes):
             logits, state = self._step(self.params, state, tokens)
-            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-            tokens = nxt
-            steps += 1
+            tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            self.steps += 1
+            if self._tiered and self.steps % ec.maintain_every == 0:
+                state = self._maintain(state)
+            nxt = np.asarray(tokens)
+            pos = np.asarray(state.pos)
+            now = time.time()
             for i, r in enumerate(lanes):
                 if r is None:
                     continue
                 r.tokens.append(int(nxt[i]))
-                if len(r.tokens) >= r.max_new or int(state.pos) >= ec.max_len - 1:
+                if len(r.tokens) >= r.max_new or int(pos[i]) >= ec.max_len - 1:
                     r.done = True
-            if steps % 16 == 0:
-                log(f"[engine] step {steps}, queue={len(self.queue)}, "
+                    r.done_at = now
+            if self.steps % 16 == 0:
+                log(f"[engine] step {self.steps}, queue={len(self.queue)}, "
                     f"done={len(finished)}")
-            state, tokens = refill(state, tokens)
-            if int(state.pos) >= ec.max_len - 1:
-                for r in lanes:
-                    if r is not None:
-                        r.done = True
-                        finished.append(r)
-                break
-        finished.extend(r for r in lanes if r is not None and r.done
-                        and r not in finished)
+            state, tokens = self._refill(state, tokens, lanes, finished)
+        self.final_state = state            # introspection (tests, examples)
         return finished
+
+    @property
+    def counters(self) -> dict:
+        """Tiered-backend metadata/migration counters summed over layers
+        (empty for the dense backend)."""
+        if not self._tiered or not hasattr(self, "final_state"):
+            return {}
+        return self.backend.counters(self.final_state)

@@ -384,33 +384,78 @@ def _dev_update(cfg: TieredConfig, st: TieredState, pid, slot,
 
 def append_token(cfg: TieredConfig, st: TieredState, seq_ids, k, v, pos):
     """Write one new token's KV for each sequence at position ``pos``.
-    k,v [B, KV, hd].  New tokens land in the page's home slot; if the page
-    is currently migrated (non-identity), the fast copy is updated instead."""
-    B = seq_ids.shape[0]
+    k,v [B, KV, hd]; ``pos`` a scalar or a per-sequence [B] vector
+    (ragged lanes).  New tokens land in the page's home slot; if the page
+    is currently migrated (non-identity), the fast copy is updated
+    instead.  Lanes whose position is negative (idle) or past the
+    sequence's page capacity write nothing — an overflowing lane must
+    never spill into a neighbour's logical range."""
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), seq_ids.shape)
     page = pos // cfg.page_tokens
     off = pos % cfg.page_tokens
-    ids = logical_page(cfg, seq_ids, page)
+    ok = (page >= 0) & (page < cfg.max_pages_per_seq)
+    ids = logical_page(cfg, seq_ids, jnp.clip(page, 0,
+                                              cfg.max_pages_per_seq - 1))
     entry = st.leaf_table[ids]
     in_fast = entry != INVALID
     # masked scatter via out-of-bounds drop: disabled lanes must not write
     # anything (a clamped index + old-value write can clobber an enabled
     # write to the same row — scatter order is undefined)
-    fast_idx = jnp.where(in_fast, entry, cfg.fast_slots)
-    slow_idx = jnp.where(in_fast, cfg.n_logical, ids)
+    fast_idx = jnp.where(ok & in_fast, entry, cfg.fast_slots)
+    slow_idx = jnp.where(ok & ~in_fast, ids, cfg.n_logical)
     dt = st.fast_k.dtype
     st = st._replace(
         fast_k=st.fast_k.at[fast_idx, :, off].set(k.astype(dt), mode="drop"),
         fast_v=st.fast_v.at[fast_idx, :, off].set(v.astype(dt), mode="drop"),
         slow_k=st.slow_k.at[slow_idx, :, off].set(k.astype(dt), mode="drop"),
         slow_v=st.slow_v.at[slow_idx, :, off].set(v.astype(dt), mode="drop"),
-        wtouch=st.wtouch.at[ids].add(1))
+        wtouch=st.wtouch.at[jnp.where(ok, ids, cfg.n_logical)].add(
+            1, mode="drop"))
     if cfg.pol.write_weight > 1:        # write-aware: appends heat pages up
         # base weight only: the extra (write_weight-1) per write comes from
         # wtouch at scoring time (run_scheduler), matching the simulator's
         # R + write_weight*W accumulation without double counting
         st = _tr_replace(st, pol_track.record(
-            cfg.pol, _tr_view(cfg, st), ids, now=_now(cfg, st)))
+            cfg.pol, _tr_view(cfg, st), ids, now=_now(cfg, st), enable=ok))
     return st
+
+
+def prefill_tokens(cfg: TieredConfig, st: TieredState, seq, k, v,
+                   length=None):
+    """Batched prompt ingest: write tokens ``[0, length)`` of sequence
+    ``seq`` into its slow-pool homes in one pass (no per-token replay).
+
+    k, v: [S, KV, hd] post-RoPE prompt K/V; ``S`` may carry padding —
+    tokens at positions >= ``length`` (traced scalar; default S) are
+    either skipped page-wise or masked downstream by ``seq_lens`` until
+    decode appends overwrite them.  Only whole pages below ``length``
+    plus the partial tail page are written, each as one row store.
+
+    Precondition: the sequence's pages map to identity (freshly
+    initialised or just released) — writes go to the homes, so a still-
+    resident page's fast copy would go stale.  The engine releases every
+    lane before prefilling it."""
+    S, KV, hd = k.shape
+    P = cfg.page_tokens
+    npages = -(-S // P)
+    if npages > cfg.max_pages_per_seq:
+        raise ValueError(
+            f"prompt of {S} tokens needs {npages} pages; sequence capacity "
+            f"is {cfg.max_pages_per_seq}")
+    length = jnp.asarray(S if length is None else length, jnp.int32)
+    dt = st.slow_k.dtype
+    pad = npages * P - S
+    pages_k = jnp.pad(k.astype(dt), ((0, pad), (0, 0), (0, 0))) \
+        .reshape(npages, P, KV, hd).transpose(0, 2, 1, 3)
+    pages_v = jnp.pad(v.astype(dt), ((0, pad), (0, 0), (0, 0))) \
+        .reshape(npages, P, KV, hd).transpose(0, 2, 1, 3)
+    seq = jnp.asarray(seq, jnp.int32)
+    j = jnp.arange(npages, dtype=jnp.int32)
+    rows = jnp.where(j * P < length,
+                     seq * cfg.max_pages_per_seq + j, cfg.n_logical)
+    return st._replace(
+        slow_k=st.slow_k.at[rows].set(pages_k, mode="drop"),
+        slow_v=st.slow_v.at[rows].set(pages_v, mode="drop"))
 
 
 def _leaf_hosting_slot(cfg: TieredConfig, leaf):

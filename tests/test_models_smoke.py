@@ -82,9 +82,9 @@ def test_decode_step(arch):
         lambda p, s, t: decode_step(cfg, p, s, t))(params, state, tokens)
     assert logits.shape == (B, cfg.vocab)
     assert np.isfinite(np.asarray(logits)).all()
-    assert int(state.pos) == 1
+    assert state.pos.shape == (B,) and (np.asarray(state.pos) == 1).all()
     logits2, state = decode_step(cfg, params, state, tokens)
-    assert int(state.pos) == 2
+    assert (np.asarray(state.pos) == 2).all()
     assert np.isfinite(np.asarray(logits2)).all()
 
 

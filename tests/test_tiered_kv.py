@@ -289,3 +289,56 @@ def test_release_seq_resets_all_metadata(state):
     cnt = np.zeros(CFG.n_leaf, np.int32)
     np.add.at(cnt, np.nonzero(lt[:CFG.n_logical] != tk.INVALID)[0] // tk.E, 1)
     np.testing.assert_array_equal(cnt, np.asarray(st.leaf_cnt))
+
+
+def test_prefill_tokens_batched_ingest(state):
+    """prefill_tokens writes a prompt's pages into the slow homes in one
+    pass: attention over the prefilled store equals attention over a
+    per-token append replay of the same K/V (padding past ``length``
+    stays invisible)."""
+    L = 21                      # partial last page (page_tokens=16)
+    key = jax.random.key(13)
+    k = jax.random.normal(key, (L, CFG.n_kv_heads, CFG.head_dim))
+    v = jax.random.normal(jax.random.fold_in(key, 1), k.shape)
+    q = jax.random.normal(jax.random.fold_in(key, 2),
+                          (CFG.n_seqs, CFG.n_kv_heads, 4, CFG.head_dim))
+
+    # replay reference: append token by token into a fresh store
+    st_ref = tk.init_state(CFG)
+    for t in range(L):
+        st_ref = tk.append_token(
+            CFG, st_ref, jnp.arange(CFG.n_seqs),
+            jnp.stack([k[t]] * CFG.n_seqs), jnp.stack([v[t]] * CFG.n_seqs),
+            pos=t)
+
+    # batched ingest, padded prompt (pad rows must not leak)
+    pad = 7
+    kp = jnp.concatenate([k, jnp.ones((pad,) + k.shape[1:])])
+    vp = jnp.concatenate([v, jnp.ones((pad,) + v.shape[1:])])
+    st = tk.init_state(CFG)
+    for seq in range(CFG.n_seqs):
+        st = tk.prefill_tokens(CFG, st, seq, kp, vp, length=L)
+
+    out_ref, st_ref = _attend(st_ref, q, seq_len=L)
+    out, st = _attend(st, q, seq_len=L)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(out_ref))
+
+
+def test_append_token_ragged_and_guarded(state):
+    """Vector ``pos``: each lane writes its own page/offset; negative
+    (idle) and past-capacity lanes write nothing anywhere."""
+    st = tk.init_state(CFG)
+    k = jnp.ones((CFG.n_seqs, CFG.n_kv_heads, CFG.head_dim)) * 3.0
+    pos = jnp.asarray([5, 17])           # lane 0 page 0, lane 1 page 1
+    st = tk.append_token(CFG, st, jnp.arange(CFG.n_seqs), k, k * 2, pos)
+    np.testing.assert_allclose(np.asarray(st.slow_k[0, :, 5]),
+                               np.asarray(k[0]))
+    p1 = CFG.max_pages_per_seq + 1       # seq 1, page 1
+    np.testing.assert_allclose(np.asarray(st.slow_k[p1, :, 1]),
+                               np.asarray(k[1]))
+    before_k = np.asarray(st.slow_k).copy()
+    before_w = np.asarray(st.wtouch).copy()
+    bad = jnp.asarray([-1, CFG.max_pages_per_seq * CFG.page_tokens])
+    st = tk.append_token(CFG, st, jnp.arange(CFG.n_seqs), k * 9, k * 9, bad)
+    np.testing.assert_array_equal(np.asarray(st.slow_k), before_k)
+    np.testing.assert_array_equal(np.asarray(st.wtouch), before_w)
