@@ -2,8 +2,8 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: verify test bench-smoke bench-serve bench-engine bench golden \
-	examples-smoke
+.PHONY: verify test bench-smoke bench-serve bench-engine bench-sched \
+	bench golden examples-smoke
 
 verify: test bench-smoke examples-smoke
 
@@ -28,6 +28,13 @@ bench-serve:
 bench-engine:
 	$(PY) -m benchmarks.run --engine
 	$(PY) -m benchmarks.check_bench BENCH_smoke.json engine_decode
+
+# request-scheduler benchmark: greedy wave-refill vs chunked prefill +
+# multi-tenant QoS on a two-tenant mixed trace; the gate requires the
+# interactive tenant's p99 to improve at <= 5% aggregate tokens/s cost
+bench-sched:
+	$(PY) -m benchmarks.run --sched
+	$(PY) -m benchmarks.check_bench BENCH_smoke.json sched
 
 # every example on a tiny geometry (EXAMPLES_SMOKE=1), so the demos can't
 # silently rot — CI runs this too

@@ -19,9 +19,15 @@ Usage:
   PYTHONPATH=src python -m benchmarks.check_bench [BENCH_smoke.json]
                                                   [section ...]
 
-With no section arguments both contracts are enforced (the CI smoke run
-writes both); ``make bench-serve`` / ``make bench-engine`` pass their own
-section so the standalone targets stay self-contained.
+sched (the scheduler PR's contract, ``make bench-sched``): on the
+two-tenant mixed prompt-length trace, chunked prefill + QoS admission
+improves the interactive tenant's p99 request latency over greedy
+wave-refill without reducing aggregate tokens/s by more than 5%.
+
+With no section arguments the serve_decode + engine_decode contracts are
+enforced (the CI smoke run writes both); ``make bench-serve`` /
+``make bench-engine`` / ``make bench-sched`` pass their own section so
+the standalone targets stay self-contained.
 """
 
 from __future__ import annotations
@@ -63,7 +69,32 @@ def _check_engine(ed) -> bool:
     return ran_ok and meta_ok and parity_ok
 
 
-_CHECKS = {"serve_decode": _check_serve, "engine_decode": _check_engine}
+def _check_sched(sd) -> bool:
+    """The request-scheduler contract (DESIGN.md §9): on the two-tenant
+    mixed prompt-length trace, chunked prefill + QoS admission must
+    improve the interactive tenant's p99 request latency over the greedy
+    wave-refill scheduler, everyone must be served, and aggregate
+    tokens/s must stay within 5% of greedy."""
+    greedy, chunked = sd["greedy"], sd["chunked_qos"]
+    served_ok = greedy["served"] == chunked["served"] > 0
+    p99_ok = (chunked["interactive_p99_ms"] < greedy["interactive_p99_ms"])
+    ratio = sd["tokens_ratio"]
+    tput_ok = ratio >= 0.95
+    print(f"sched: interactive p99 chunked+QoS "
+          f"{chunked['interactive_p99_ms']:.0f}ms vs greedy "
+          f"{greedy['interactive_p99_ms']:.0f}ms "
+          f"({sd['p99_interactive_speedup']:.2f}x) "
+          f"[{'OK' if p99_ok else 'REGRESSED'}]")
+    print(f"sched: aggregate {chunked['tokens_per_s']:.0f} vs "
+          f"{greedy['tokens_per_s']:.0f} tok/s (ratio {ratio:.3f}) "
+          f"[{'OK' if tput_ok else 'REGRESSED'}]")
+    print(f"sched: served {chunked['served']}/{greedy['served']} "
+          f"[{'OK' if served_ok else 'DROPPED REQUESTS'}]")
+    return served_ok and p99_ok and tput_ok
+
+
+_CHECKS = {"serve_decode": _check_serve, "engine_decode": _check_engine,
+           "sched": _check_sched}
 
 
 def check(path: str = "BENCH_smoke.json",

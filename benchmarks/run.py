@@ -7,15 +7,20 @@ detailed per-figure data lands in benchmarks/results/*.csv.
 Usage:
   PYTHONPATH=src python -m benchmarks.run [--quick] [--skip-sim] [--smoke]
                                           [--policies] [--serve] [--engine]
+                                          [--sched]
 
 ``--serve`` runs only the decode-step microbenchmark (legacy concat +
 re-translate-everything baseline vs the zero-copy cached split-pool path)
 and merges a ``serve_decode`` section into BENCH_smoke.json; ``--engine``
 does the same for the FULL-MODEL decode loop (dense vs tiered KV backend,
 ``engine_decode`` section, including the bit-identity check the gate
-enforces); ``--smoke`` includes both sections.  ``benchmarks.check_bench``
-gates CI on the cached path actually beating the baseline it was measured
-against and on the tiered backend's logits parity.
+enforces); ``--smoke`` includes both sections.  ``--sched`` benchmarks the
+request scheduler (greedy wave-refill vs chunked prefill + multi-tenant
+QoS on a two-tenant mixed prompt-length trace, ``sched`` section).
+``benchmarks.check_bench`` gates CI on the cached path actually beating
+the baseline it was measured against, on the tiered backend's logits
+parity, and (``make bench-sched``) on chunked+QoS improving the
+interactive tenant's p99 latency without losing aggregate tokens/s.
 """
 
 from __future__ import annotations
@@ -211,6 +216,151 @@ def _engine_decode_section() -> tuple[list[dict], dict]:
     return rows, section
 
 
+def _sched_section() -> tuple[list[dict], dict]:
+    """Request-scheduler benchmark (DESIGN.md §9): the same two-tenant
+    mixed prompt-length trace served twice through the tiered engine —
+
+      greedy        PR 4's wave-refill scheduler: monolithic one-shot
+                    prefill at admission, FIFO/bucketed, tenant-blind
+      chunked_qos   chunked prefill (bounded chunk budget per step) +
+                    weighted QoS admission + per-tenant slot/move
+                    partition + direct-to-fast ingest for the on-demand
+                    interactive tenant
+
+    The trace front-loads two long prompts ahead of a stream of short
+    interactive requests: under greedy the interactive tenant queues
+    behind two monolithic prefills; under chunked+QoS the long prompts
+    ingest one chunk per step while the interactive lane decodes.
+    Reports aggregate tokens/s and per-tenant p50/p99 request latency
+    (best-of-interleaved reps: noise only ever adds time).  The gate
+    (``check_bench``): chunked+QoS improves the interactive tenant's p99
+    without costing more than 5% aggregate tokens/s."""
+    import jax
+    import numpy as np
+
+    from repro.configs import get_config, reduce_for_smoke
+    from repro.models import init_params
+    from repro.serve.engine import Engine, EngineConfig, Request
+    from repro.serve.sched import TenantConfig
+
+    cfg = reduce_for_smoke(get_config("llama3-8b"))
+    params = init_params(cfg, jax.random.key(0))
+    # long-context trace: a monolithic one-shot prefill at P=1024 costs
+    # hundreds of decode steps (quadratic attention + the full-sequence
+    # unembed the engine throws away), so greedy stalls the interactive
+    # tenant behind it; the chunk forward pays neither all at once
+    B, max_len, page_tokens = 2, 1024, 16
+    long_ctx, short_ctx, max_new = 900, 6, 6
+    n_long, n_short, chunk = 2, 8, 128
+    tenants = (TenantConfig("interactive", weight=2, policy="on_demand"),
+               TenantConfig("batch", weight=1))
+    engines = {
+        "greedy": Engine(cfg, params, EngineConfig(
+            batch=B, max_len=max_len, backend="tiered",
+            page_tokens=page_tokens, fast_data_slots=16, maintain_every=4)),
+        "chunked_qos": Engine(cfg, params, EngineConfig(
+            batch=B, max_len=max_len, backend="tiered",
+            page_tokens=page_tokens, fast_data_slots=16, maintain_every=4,
+            scheduler="chunked", prefill_chunk=chunk, tenants=tenants,
+            admit_pages=2)),
+    }
+
+    def trace():
+        rng = np.random.default_rng(0)
+        rs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab, long_ctx),
+                      max_new=max_new, tenant_id="batch")
+              for i in range(n_long)]
+        rs += [Request(rid=n_long + i,
+                       prompt=rng.integers(0, cfg.vocab, short_ctx),
+                       max_new=max_new, tenant_id="interactive")
+               for i in range(n_short)]
+        return rs
+
+    n_req = n_long + n_short
+    for eng in engines.values():            # warm every jit key once
+        for r in trace():
+            eng.submit(r)
+        assert len(eng.run()) == n_req
+
+    reps = {name: [] for name in engines}
+    for _ in range(3):                      # interleaved best-of reps
+        for name, eng in engines.items():
+            rs = trace()
+            for r in rs:
+                eng.submit(r)
+            t0 = time.perf_counter()
+            done = eng.run()
+            wall = time.perf_counter() - t0
+            assert len(done) == n_req, (name, len(done))
+            reps[name].append((wall, done, eng.request_stats(done)))
+
+    rows, section = [], {}
+    for name, eng in engines.items():
+        walls = [w for w, _, _ in reps[name]]
+        tokens = sum(len(r.tokens) for r in reps[name][0][1])
+        best = min(range(len(walls)), key=lambda i: walls[i])
+        stats = reps[name][best][2]
+        lat = lambda blk, q: min(          # noqa: E731 — min over reps
+            s[blk]["latency_ms"][q] if blk == "aggregate"
+            else s["tenants"][blk]["latency_ms"][q]
+            for _, _, s in reps[name])
+        section[name] = dict(
+            wall_s=min(walls), tokens=tokens,
+            tokens_per_s=tokens / min(walls),
+            latency_p50_ms=lat("aggregate", "p50"),
+            latency_p99_ms=lat("aggregate", "p99"),
+            interactive_p50_ms=lat("interactive", "p50"),
+            interactive_p99_ms=lat("interactive", "p99"),
+            batch_p99_ms=lat("batch", "p99"),
+            ttft_p50_ms=stats["aggregate"]["ttft_ms"]["p50"],
+            served=n_req)
+        if "fairness" in stats:
+            section[name]["fairness"] = stats["fairness"]
+        if eng.counters:
+            c = eng.counters
+            section[name]["migrations"] = c["migrations"]
+            section[name]["epoch_promo_bytes_tail"] = \
+                c.get("epoch_promo_bytes", [])[-8:]
+        rows.append(dict(
+            name=f"sched_{name}",
+            us_per_call=1e6 * min(walls) / max(tokens, 1),
+            derived=f"{section[name]['tokens_per_s']:.0f}tok/s "
+                    f"int-p99={section[name]['interactive_p99_ms']:.0f}ms"))
+    section["p99_interactive_speedup"] = (
+        section["greedy"]["interactive_p99_ms"]
+        / max(section["chunked_qos"]["interactive_p99_ms"], 1e-9))
+    section["tokens_ratio"] = (section["chunked_qos"]["tokens_per_s"]
+                               / section["greedy"]["tokens_per_s"])
+    section["config"] = dict(
+        arch=cfg.name, batch=B, max_len=max_len, page_tokens=page_tokens,
+        long_ctx=long_ctx, short_ctx=short_ctx, n_long=n_long,
+        n_short=n_short, max_new=max_new, prefill_chunk=chunk,
+        tenants={t.name: t.weight for t in tenants})
+    return rows, section
+
+
+def sched(out_path: str = "BENCH_smoke.json") -> str:
+    """Run only the request-scheduler benchmark and merge its ``sched``
+    section into ``out_path``."""
+    rows, section = _sched_section()
+    payload = {}
+    if os.path.exists(out_path):
+        with open(out_path) as f:
+            payload = json.load(f)
+    payload["sched"] = section
+    payload.setdefault("rows", [])
+    payload["rows"] = [r for r in payload["rows"]
+                       if not r["name"].startswith("sched_")] + rows
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+    for row in rows:
+        print(f"{row['name']},{row['us_per_call']:.1f},{row['derived']}")
+    print(f"sched_p99_interactive_speedup,0,"
+          f"{section['p99_interactive_speedup']:.2f}x")
+    print(f"sched_tokens_ratio,0,{section['tokens_ratio']:.3f}")
+    return out_path
+
+
 def serve(out_path: str = "BENCH_smoke.json") -> str:
     """Run only the decode-step microbenchmark and merge its
     ``serve_decode`` section into ``out_path`` (creating the file if it
@@ -390,6 +540,10 @@ def main() -> None:
                     help="full-model dense-vs-tiered decode loop only; "
                          "merges an engine_decode section into "
                          "BENCH_smoke.json")
+    ap.add_argument("--sched", action="store_true",
+                    help="request-scheduler benchmark only (greedy vs "
+                         "chunked+QoS on a two-tenant mixed trace); "
+                         "merges a sched section into BENCH_smoke.json")
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
@@ -402,6 +556,11 @@ def main() -> None:
     if args.engine:
         path = engine()
         print(f"engine_json,0,\"{path}\"")
+        return
+
+    if args.sched:
+        path = sched()
+        print(f"sched_json,0,\"{path}\"")
         return
 
     if args.smoke:

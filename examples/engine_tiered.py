@@ -50,13 +50,29 @@ for backend in ("dense", "tiered"):
     for r in sorted(done, key=lambda r: r.rid):
         print(f"  req {r.rid}: prompt {len(r.prompt):2d} tok -> "
               f"{len(r.tokens):2d} new, latency {r.latency * 1e3:7.1f} ms, "
-              f"tokens {r.tokens[:6]}...")
+              f"ttft {r.ttft * 1e3:6.1f} ms, tokens {r.tokens[:6]}...")
+    # engine observability: per-request latency percentiles + the
+    # log-bucketed token-latency histogram (the same block the --sched
+    # benchmark exports into BENCH_smoke.json)
+    agg = eng.request_stats(done)["aggregate"]
+    hist = agg["token_latency_hist"]
+    top = max(range(len(hist["counts"])), key=hist["counts"].__getitem__)
+    lo = hist["edges_ms"][top - 1] if top else 0.0
+    print(f"  latency p50 {agg['latency_ms']['p50']:.1f} ms / "
+          f"p99 {agg['latency_ms']['p99']:.1f} ms; "
+          f"ttft p50 {agg['ttft_ms']['p50']:.1f} ms; modal token "
+          f"latency bucket >= {lo:.2g} ms "
+          f"({hist['counts'][top]}/{sum(hist['counts'])} tokens)")
     if backend == "tiered":
         c = eng.counters
         print(f"  metadata: lookups={c['lookups']} dev_hits={c['dev_hits']} "
               f"migrations={c['migrations']} demotions={c['demotions']} "
               f"promo_bytes={c['promo_bytes']} demo_bytes={c['demo_bytes']}")
         print(f"  releases on lane recycle: {eng.releases}")
+        # per-epoch migration bandwidth (bytes between maintain passes)
+        print(f"  epoch promo bytes: {c['epoch_promo_bytes']}")
+        print(f"  epoch demo bytes:  {c['epoch_demo_bytes']}")
+        assert sum(c["epoch_promo_bytes"]) == c["promo_bytes"]
 
 assert streams["dense"] == streams["tiered"], \
     "tiered decode diverged from dense — the translation must be invisible"

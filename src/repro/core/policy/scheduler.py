@@ -23,7 +23,7 @@ import jax.numpy as jnp
 from . import deciders
 from .config import PolicyConfig
 
-__all__ = ["Plan", "plan"]
+__all__ = ["Plan", "plan", "plan_tenants"]
 
 _SCORE_CAP = 1 << 20       # demotion ranking headroom (scores clip here)
 
@@ -44,7 +44,7 @@ class Plan(NamedTuple):
 
 
 def plan(pol: PolicyConfig, score, resident, max_moves: int,
-         demote_key=None) -> Plan:
+         demote_key=None, member=None) -> Plan:
     """Build this epoch's move queues.
 
     score       [n] int32 tracker scores (higher == hotter)
@@ -54,18 +54,23 @@ def plan(pol: PolicyConfig, score, resident, max_moves: int,
                 ``score``, which callers pre-weight — e.g. the tiered
                 KV-cache folds write intensity in for write-aware
                 policies — so hotter == kept, coldest demote first)
+    member      optional [n] bool eligibility restriction: blocks outside
+                it enter NEITHER queue (the tenant partition of
+                ``plan_tenants``; None == everything eligible)
     """
     n = score.shape[0]
     k = min(int(max_moves), n)
 
     want_p = deciders.promote_mask(pol, score, resident)
+    want_d_member = jnp.ones((n,), jnp.bool_) if member is None else member
+    want_p &= want_d_member
     p_key = jnp.where(want_p, jnp.clip(score, 0, _SCORE_CAP) + 1, 0)
     p_val, p_ids = jax.lax.top_k(p_key, k)
     p_en = p_val > 0
     if pol.decider == "topk":
         p_en &= jnp.arange(k) < pol.topk
 
-    want_d = deciders.demote_mask(pol, score, resident)
+    want_d = deciders.demote_mask(pol, score, resident) & want_d_member
     dk = score if demote_key is None else demote_key
     d_keyv = jnp.where(want_d, _SCORE_CAP - jnp.clip(dk, 0, _SCORE_CAP - 1),
                        0)
@@ -83,3 +88,45 @@ def plan(pol: PolicyConfig, score, resident, max_moves: int,
 
     return Plan(p_ids.astype(jnp.int32), p_en,
                 d_ids.astype(jnp.int32), d_en)
+
+
+def plan_tenants(pols, score, resident, group, quotas,
+                 demote_key=None) -> Plan:
+    """Multi-tenant partition of the move budget (DESIGN.md §9): one
+    bounded ``plan`` per tenant over ITS OWN blocks, concatenated into a
+    single pair of queues.
+
+    pols        static tuple of per-tenant PolicyConfig — each tenant
+                brings its own decider thresholds and ``max_moves`` budget
+                (the trackers are shared: scores come in pre-computed)
+    score       [n] int32 shared tracker scores
+    resident    [n] bool
+    group       [n] int32 tenant id per block (< 0 == unowned: those
+                blocks move for nobody — e.g. pages of idle lanes)
+    quotas      static tuple of per-tenant fast-slot quotas: tenant t's
+                enabled promotions are capped at ``quota_t`` minus its
+                current resident count, so no tenant can grow past its
+                partition no matter how hot its pages run
+
+    Invariants (tests/test_sched.py + tests/test_properties.py):
+      * per tenant: enabled promotions + demotions <= pols[t].max_moves;
+      * every enabled lane belongs to its tenant's partition;
+      * per tenant: residents + enabled promotions <= quotas[t];
+      * total moves <= sum of tenant budgets (budget conservation).
+    """
+    assert len(pols) == len(quotas) and len(pols) >= 1
+    plans = []
+    for t, (pol, quota) in enumerate(zip(pols, quotas)):
+        mine = group == t
+        p = plan(pol, score, resident, pol.max_moves,
+                 demote_key=demote_key, member=mine)
+        res_t = (resident & mine).sum(dtype=jnp.int32)
+        room = jnp.maximum(quota - res_t, 0)
+        k = p.promote_en.shape[0]
+        p = p._replace(promote_en=p.promote_en & (jnp.arange(k) < room))
+        plans.append(p)
+    cat = lambda xs: jnp.concatenate(xs, axis=0)  # noqa: E731
+    return Plan(cat([p.promote_ids for p in plans]),
+                cat([p.promote_en for p in plans]),
+                cat([p.demote_ids for p in plans]),
+                cat([p.demote_en for p in plans]))

@@ -2,14 +2,35 @@
 
   PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --smoke \\
       --requests 8 --batch 4 --max-new 16
+
+Request scheduling (DESIGN.md §9): ``--scheduler chunked`` enables
+chunked prefill (``--prefill-chunk`` tokens per step) and, with
+``--tenants``, multi-tenant QoS admission with a per-tenant fast-slot /
+move-budget partition and direct-to-fast ingest for on-demand tenants.
 """
 
 from __future__ import annotations
 
 import argparse
+import sys
 import time
 
 import numpy as np
+
+
+def _parse_tenants(spec: str):
+    """"name[:weight[:policy]],..." -> tuple of TenantConfig, e.g.
+    "interactive:2:on_demand,batch:1"."""
+    from repro.serve.sched import TenantConfig
+    out = []
+    for part in spec.split(","):
+        bits = part.strip().split(":")
+        if not bits[0]:
+            raise SystemExit(f"--tenants: empty tenant name in {spec!r}")
+        weight = int(bits[1]) if len(bits) > 1 and bits[1] else 1
+        policy = bits[2] if len(bits) > 2 and bits[2] else None
+        out.append(TenantConfig(bits[0], weight=weight, policy=policy))
+    return tuple(out)
 
 
 def main():
@@ -26,6 +47,26 @@ def main():
                          "tiered stores (identical tokens, bit for bit)")
     ap.add_argument("--policy", default=None,
                     help="core/policy preset for --backend tiered")
+    ap.add_argument("--scheduler", choices=("greedy", "chunked", "wave"),
+                    default=None,
+                    help="request scheduler (serve/sched, DESIGN.md §9): "
+                         "greedy = PR 4 wave-refill bit for bit; chunked = "
+                         "chunked prefill + multi-tenant QoS admission; "
+                         "omitting the flag keeps greedy but the implicit "
+                         "wave-refill default is deprecated ('wave' is a "
+                         "deprecated greedy alias)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="--scheduler chunked: prompt tokens ingested per "
+                         "engine step (page-aligned for tiered; 0 = "
+                         "one-shot prefill, QoS-only)")
+    ap.add_argument("--tenants", default=None,
+                    help="multi-tenant QoS spec 'name[:weight[:policy]],"
+                         "...' (e.g. 'interactive:2:on_demand,batch:1'); "
+                         "requests are assigned round-robin across tenants "
+                         "in this demo driver")
+    ap.add_argument("--admit-pages", type=int, default=2,
+                    help="direct-to-fast pages per ingest for on-demand "
+                         "tenants (DESIGN.md §9 invalidation note)")
     args = ap.parse_args()
 
     import jax
@@ -38,25 +79,40 @@ def main():
         cfg = reduce_for_smoke(cfg)
     if cfg.is_encoder:
         raise SystemExit(f"{cfg.name} is encoder-only: no decode serving")
+    if args.scheduler is None:
+        print("serve: note — no --scheduler given; keeping the greedy "
+              "wave-refill default (deprecated as an implicit choice; "
+              "pass --scheduler greedy or chunked; see DESIGN.md §9)",
+              file=sys.stderr)
+    tenants = _parse_tenants(args.tenants) if args.tenants else ()
     params = init_params(cfg, jax.random.key(0))
     try:
-        eng = Engine(cfg, params, EngineConfig(batch=args.batch,
-                                               max_len=args.max_len,
-                                               backend=args.backend,
-                                               policy=args.policy))
+        eng = Engine(cfg, params, EngineConfig(
+            batch=args.batch, max_len=args.max_len, backend=args.backend,
+            policy=args.policy, scheduler=args.scheduler or "greedy",
+            prefill_chunk=args.prefill_chunk, tenants=tenants,
+            admit_pages=args.admit_pages))
     except NotImplementedError as e:
         raise SystemExit(f"{cfg.name}: {e}")
     rng = np.random.default_rng(0)
     t0 = time.time()
+    names = [t.name for t in tenants] or ["default"]
     for rid in range(args.requests):
         eng.submit(Request(rid=rid,
                            prompt=rng.integers(0, cfg.vocab, size=4),
-                           max_new=args.max_new))
+                           max_new=args.max_new,
+                           tenant_id=names[rid % len(names)]))
     done = eng.run(log=print)
     dt = time.time() - t0
     tok = sum(len(r.tokens) for r in done)
     print(f"served {len(done)} requests, {tok} tokens in {dt:.1f}s "
           f"({tok/dt:.1f} tok/s)")
+    stats = eng.request_stats(done)
+    lat = stats["aggregate"]["latency_ms"]
+    print(f"latency p50 {lat['p50']:.1f} ms, p99 {lat['p99']:.1f} ms "
+          f"(ttft p50 {stats['aggregate']['ttft_ms']['p50']:.1f} ms)")
+    if "fairness" in stats:
+        print(f"fairness: {stats['fairness']}")
     if eng.counters:
         print(f"tiered counters: {eng.counters}")
 

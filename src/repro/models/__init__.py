@@ -3,12 +3,14 @@
 from .kv_backend import (DenseBackend, KVBackend, TieredBackend,
                          make_backend)
 from .model import (abstract_decode_state, abstract_params_and_axes,
-                    decode_step, forward, init_decode_state, init_params,
-                    init_params_and_axes, input_specs, loss_fn, prefill)
+                    decode_step, forward, forward_chunk, init_chunk_buffers,
+                    init_decode_state, init_params, init_params_and_axes,
+                    input_specs, loss_fn, prefill)
 
 __all__ = [
     "DenseBackend", "KVBackend", "TieredBackend", "abstract_decode_state",
-    "abstract_params_and_axes", "decode_step", "forward",
-    "init_decode_state", "init_params", "init_params_and_axes",
-    "input_specs", "loss_fn", "make_backend", "prefill",
+    "abstract_params_and_axes", "decode_step", "forward", "forward_chunk",
+    "init_chunk_buffers", "init_decode_state", "init_params",
+    "init_params_and_axes", "input_specs", "loss_fn", "make_backend",
+    "prefill",
 ]

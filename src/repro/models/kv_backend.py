@@ -144,6 +144,22 @@ class DenseBackend:
         return state._replace(pos=state.pos.at[lane].set(length),
                               caches={**c, "k": ck, "v": cv})
 
+    def write_prefill_chunk(self, state, lane, k_layers, v_layers, start,
+                            length):
+        """Chunked prompt ingest: install rows [start, start + C) of one
+        lane's prompt K/V (k/v [L, C, KV, hd]; ``start``/``lane`` traced).
+        ``pos`` is untouched — the scheduler sets it when the last chunk
+        lands (the lane stays parked at pos = -1 until then)."""
+        c = state.caches
+        lane = jnp.asarray(lane, jnp.int32)
+        start = jnp.asarray(start, jnp.int32)
+        idx = (jnp.int32(0), lane, start, jnp.int32(0), jnp.int32(0))
+        ck = jax.lax.dynamic_update_slice(
+            c["k"], k_layers[:, None].astype(c["k"].dtype), idx)
+        cv = jax.lax.dynamic_update_slice(
+            c["v"], v_layers[:, None].astype(c["v"].dtype), idx)
+        return state._replace(caches={**c, "k": ck, "v": cv})
+
 
 # ---------------------------------------------------------------------------
 # tiered: one Trimma two-tier store per attention layer
@@ -247,6 +263,46 @@ class TieredBackend:
         )(state.caches, k_layers, v_layers)
         return state._replace(pos=state.pos.at[lane].set(length),
                               caches=caches)
+
+    def write_prefill_chunk(self, state, lane, k_layers, v_layers, start,
+                            length):
+        """Chunked prompt ingest, one page-aligned chunk: rows
+        [start, start + C) of each layer's prompt K/V land in the page's
+        *current* tier (``tiered.kvcache.prefill_chunk`` routes resident
+        pages to their fast copy — coherent with direct-to-fast
+        admission).  ``pos`` untouched; the scheduler sets it when the
+        final chunk lands."""
+        from repro.tiered import kvcache as tk
+        caches = jax.vmap(
+            lambda st, k, v: tk.prefill_chunk(self.tcfg, st, lane, k, v,
+                                              start, length)
+        )(state.caches, k_layers, v_layers)
+        return state._replace(caches=caches)
+
+    def admit_prefix(self, state, lane, length, n_pages: int):
+        """Direct-to-fast admission at ingest: promote the first
+        ``n_pages`` prompt pages of ``lane`` into every layer's fast pool
+        now (``tiered.kvcache.admit_pages``, vmapped), instead of waiting
+        for decode touches to heat them."""
+        from repro.tiered import kvcache as tk
+        caches = jax.vmap(
+            lambda st: tk.admit_pages(self.tcfg, st, lane, length,
+                                      n_pages))(state.caches)
+        return state._replace(caches=caches)
+
+    def maintain_tenants(self, state, lane_tenant, pols, quotas):
+        """Multi-tenant maintenance: one ``run_scheduler_tenants`` pass
+        per layer (vmapped).  ``lane_tenant`` [B] int32 maps each lane to
+        its tenant (< 0 == idle — those lanes' pages move for nobody);
+        ``pols``/``quotas`` are the static per-tenant policy + fast-slot
+        partition (serve/sched/qos builds them)."""
+        from repro.tiered import kvcache as tk
+        page_tenant = jnp.repeat(jnp.asarray(lane_tenant, jnp.int32),
+                                 self.tcfg.max_pages_per_seq)
+        caches = jax.vmap(
+            lambda st: tk.run_scheduler_tenants(self.tcfg, st, page_tenant,
+                                                pols, quotas))(state.caches)
+        return state._replace(caches=caches)
 
     def counters(self, state) -> dict:
         """Aggregate per-layer counters (summed over the layer axis)."""

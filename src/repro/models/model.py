@@ -50,6 +50,8 @@ def loss_fn(cfg: ArchConfig, params, batch, *, remat: str = "none"):
 
 
 forward = transformer.forward
+forward_chunk = transformer.forward_chunk
+init_chunk_buffers = transformer.init_chunk_buffers
 prefill = transformer.prefill
 decode_step = transformer.decode_step
 init_params = transformer.init_params

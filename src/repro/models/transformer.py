@@ -502,6 +502,102 @@ def _vlm_decode(cfg, params, x, state: DecodeState, backend):
 
 
 # ---------------------------------------------------------------------------
+# chunked prefill: one chunk of prompt K/V against a full-length key buffer
+# ---------------------------------------------------------------------------
+
+_CHUNK_FAMILIES = ("dense", "moe")
+
+
+def forward_chunk(cfg: ArchConfig, params, tokens, buf_k, buf_v, start):
+    """One chunked-prefill step: compute K/V (and hidden math) for prompt
+    tokens ``[start, start + C)`` attending to the previous chunks' K/V.
+
+    tokens        [B, C] int32 chunk at absolute positions start..start+C-1
+    buf_k, buf_v  [L, B, P, KV, hd] per-layer key/value buffers; rows
+                  ``< start`` hold the previous chunks' K/V, later rows are
+                  garbage (masked below).  ``P`` must equal the padded
+                  length the one-shot ``forward`` would run at.
+    start         traced int32, page/chunk aligned by the caller.
+
+    Returns the updated (buf_k, buf_v) with rows [start, start+C) written.
+
+    Bit-identicality contract (tests/test_sched.py pins it): because each
+    chunk's queries score against a key axis of the SAME length ``P`` the
+    one-shot forward uses — prefix rows bitwise equal by induction, later
+    rows additively masked to exact zeros (finite garbage + NEG_INF
+    underflows to 0 in the softmax) — every per-position reduction has the
+    same length, values and order as in ``forward(collect_cache=True)``,
+    so the chunk K/V rows (and hence the downstream decode logits) are
+    bit-identical to the one-shot prefill.  Total attention compute over
+    all chunks is the one-shot C*P sum; per-step compute is bounded by one
+    chunk (the chunk-budget math, DESIGN.md §9).
+
+    Only the plain-KV decoder families qualify (the engine's prefill
+    families); MoE is exact as long as routing stays under capacity —
+    ``moe.capacity`` scales with the token count, so a chunk can only have
+    MORE headroom than the one-shot pass (drops, when they happen at all,
+    can differ; the smoke configs never drop).
+    """
+    if cfg.family not in _CHUNK_FAMILIES:
+        raise NotImplementedError(
+            f"forward_chunk supports plain-KV decoder families "
+            f"{_CHUNK_FAMILIES}; got {cfg.family!r}")
+    B, C = tokens.shape
+    P = buf_k.shape[2]
+    if P > attn.CHUNKED_THRESHOLD:
+        # above the threshold the one-shot forward switches to the
+        # online-softmax chunked_sdpa whose accumulation order differs —
+        # plain _sdpa here would break the bit-identicality contract
+        # (the scheduler falls back to one-shot prefill instead)
+        raise NotImplementedError(
+            f"forward_chunk is bit-identical to the one-shot forward only "
+            f"below sdpa_auto's CHUNKED_THRESHOLD "
+            f"({attn.CHUNKED_THRESHOLD}); padded length {P} exceeds it")
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = logical_constraint(x, ("batch", "seq", "embed_act"))
+    start = jnp.asarray(start, jnp.int32)
+    positions = start + jnp.broadcast_to(jnp.arange(C, dtype=jnp.int32),
+                                         (B, C))
+    # same mask construction as the one-shot path (make_mask rows at
+    # q_offset = start), window included for SWA archs
+    mask = attn.make_mask(C, P, causal=cfg.causal, window=cfg.sliding_window,
+                          q_offset=start)
+    flags = jnp.asarray(layer_flags(cfg))
+
+    def body(x, layer):
+        p, flag, pk, pv = layer
+        h = rms_norm(x, p["norm1"], cfg.rms_eps)
+        q, k, v = attn._qkv(p["attn"], h, cfg, positions)
+        pk = jax.lax.dynamic_update_slice(pk, k.astype(pk.dtype),
+                                          (0, start, 0, 0))
+        pv = jax.lax.dynamic_update_slice(pv, v.astype(pv.dtype),
+                                          (0, start, 0, 0))
+        out = attn._sdpa(q, pk, pv, mask)
+        a = jnp.einsum("bshk,hkd->bsd", out, p["attn"]["wo"].astype(x.dtype))
+        x = x + a
+        h2 = rms_norm(x, p["norm2"], cfg.rms_eps)
+        if cfg.family == "moe":
+            y, _ = moe_mod.moe_ffn(p["moe"], h2, cfg)
+        else:
+            y = swiglu(h2, p["mlp"]["w_gate"], p["mlp"]["w_up"],
+                       p["mlp"]["w_down"])
+        return x + y, (pk, pv)
+
+    _, (nk, nv) = jax.lax.scan(body, x, (params["blocks"], flags,
+                                         buf_k, buf_v),
+                               unroll=_scan_unroll())
+    return nk, nv
+
+
+def init_chunk_buffers(cfg: ArchConfig, P: int, batch: int = 1):
+    """Fresh per-layer K/V buffers for a chunked prefill ([L, B, P, KV,
+    hd], the dtype ``forward`` collects its cache in)."""
+    dt = jnp.dtype(cfg.dtype)
+    shape = (cfg.n_layers, batch, P, cfg.n_kv_heads, cfg.hd)
+    return jnp.zeros(shape, dt), jnp.zeros(shape, dt)
+
+
+# ---------------------------------------------------------------------------
 # prefill: forward + cache collection
 # ---------------------------------------------------------------------------
 

@@ -102,6 +102,28 @@ def make_tiered_decode_step(tcfg, *, path: str = "zero_copy",
     return jax.jit(step)
 
 
+def make_chunk_prefill_fn(cfg: ArchConfig):
+    """Build one jitted chunked-prefill step (DESIGN.md §9): one prompt
+    chunk's K/V computed against the accumulated per-layer key buffers.
+
+    Returned signature: step(params, chunk_tokens [B, C], buf_k, buf_v,
+    start) -> (buf_k, buf_v) with rows [start, start + C) written.  The
+    buffers ([L, B, P, KV, hd], ``models.init_chunk_buffers``) must be
+    padded to the SAME length P the one-shot prefill forward would run
+    at — that is what makes every chunk's reductions (and therefore the
+    ingested K/V and all downstream decode logits) bit-identical to the
+    one-shot ``forward(collect_cache=True)`` pass.  One jit key covers
+    every (P, C) pair the caller uses it at (shapes re-trace as usual).
+    """
+    from repro.models import forward_chunk
+
+    def step(params, chunk_tokens, buf_k, buf_v, start):
+        return forward_chunk(cfg, params, chunk_tokens, buf_k, buf_v,
+                             start)
+
+    return jax.jit(step)
+
+
 def make_prefill_fn(cfg: ArchConfig, shape: ShapeConfig):
     if cfg.is_encoder:
         def fn(params, batch):          # encode: logits over frames

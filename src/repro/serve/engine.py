@@ -3,6 +3,12 @@
 Production concerns covered here:
   * continuous batching: a fixed-width decode batch; finished/empty lanes
     are refilled from the request queue each step (no head-of-line block);
+  * pluggable request scheduling (serve/sched, DESIGN.md §9): the engine
+    owns the jitted primitives and delegates refill / prefill pacing /
+    admission to a ``Scheduler`` — ``GreedyScheduler`` (default) keeps
+    the PR 4 wave-refill behaviour bit for bit; ``ChunkedScheduler`` adds
+    chunked prefill, multi-tenant QoS admission and direct-to-fast
+    ingest;
   * real prefill: a refilled lane's prompt runs through ``forward``
     (collect_cache) once and its K/V land in the lane's cache — dense
     rows or tiered slow-pool pages (``tiered.kvcache.prefill_tokens``)
@@ -33,7 +39,6 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from collections import deque
 from typing import Callable
 
 import jax
@@ -51,14 +56,30 @@ class Request:
     rid: int
     prompt: np.ndarray            # [S] int32
     max_new: int
-    arrived: float = 0.0
+    tenant_id: str = "default"    # QoS tenant (serve/sched/qos)
+    arrived: float = 0.0          # enqueue time (stamped by submit)
+    admitted_at: float = 0.0      # lane assignment time
+    first_token_at: float = 0.0   # first decoded token
     done_at: float = 0.0          # wall time the last token was decoded
     tokens: list = dataclasses.field(default_factory=list)
+    token_times: list = dataclasses.field(default_factory=list)
     done: bool = False
 
     @property
     def latency(self) -> float:
+        """End-to-end latency from the request's OWN enqueue time — never
+        from a batch-wave anchor (requests admitted mid-wave measure
+        their own span; tests/test_sched.py pins it)."""
         return self.done_at - self.arrived
+
+    @property
+    def ttft(self) -> float:
+        """Time to first token, from enqueue."""
+        return self.first_token_at - self.arrived
+
+    @property
+    def queue_wait(self) -> float:
+        return self.admitted_at - self.arrived
 
 
 @dataclasses.dataclass
@@ -72,6 +93,16 @@ class EngineConfig:
     fast_data_slots: int = 16
     policy: str | None = None     # core/policy preset name
     maintain_every: int = 4       # migration-scheduler cadence (steps)
+    # request scheduling (serve/sched, DESIGN.md §9)
+    scheduler: str = "greedy"     # "greedy" (PR 4 bit-for-bit) | "chunked"
+                                  # ("wave" = deprecated greedy alias)
+    prefill_chunk: int = 0        # chunked: prompt tokens ingested per
+                                  # engine step (0 = one-shot prefill)
+    admit_pages: int = 2          # direct-to-fast pages per ingest when a
+                                  # tenant's policy decider is on-demand
+    tenants: tuple = ()           # TenantConfig per tenant (empty: one
+                                  # default tenant)
+    starvation_bound: int = 8     # QoS: max admission skips in a row
 
 
 class TieredServer:
@@ -126,6 +157,15 @@ class TieredServer:
 _PREFILL_FAMILIES = ("dense", "moe")
 
 
+def padded_len(ctx: int, max_len: int) -> int:
+    """Prefill padding rule shared by one-shot AND chunked prefill: the
+    context pads to a power of two (few jit keys), clamped to the cache
+    capacity.  The chunked scheduler MUST size its key buffers with this
+    exact P — the chunked==one-shot bit-identicality contract hinges on
+    both paths reducing over the same padded key length."""
+    return min(1 << (max(int(ctx), 1) - 1).bit_length(), max_len)
+
+
 class Engine:
     """Greedy-decode serving engine over a fixed-width batch.
 
@@ -133,10 +173,16 @@ class Engine:
     (default, contiguous caches) or "tiered" (per-layer Trimma stores;
     same logits bit for bit).  A pre-built backend instance may be
     injected via ``backend=`` for custom geometry/policy.
+
+    ``ec.scheduler`` selects the request scheduler (serve/sched,
+    DESIGN.md §9): the engine owns the jitted primitives (decode step,
+    prefill, chunked-prefill forward, maintain, release) and delegates
+    every refill / prefill-pacing / admission decision to it.  A custom
+    ``Scheduler`` instance may be injected via ``scheduler=``.
     """
 
     def __init__(self, cfg: ArchConfig, params, ec: EngineConfig,
-                 backend=None):
+                 backend=None, scheduler=None):
         if cfg.family not in _PREFILL_FAMILIES:
             raise NotImplementedError(
                 f"Engine prefill supports KV-cache families "
@@ -148,7 +194,6 @@ class Engine:
                 "support the ring-buffer window cache "
                 "(REPRO_WINDOW_CACHE=1)")
         self.cfg, self.params, self.ec = cfg, params, ec
-        self.queue: deque[Request] = deque()
         if backend is not None:
             self.backend = backend
         else:
@@ -168,32 +213,113 @@ class Engine:
             self._maintain = jax.jit(self.backend.maintain)
             self._release = jax.jit(self.backend.release)
         self._prefill_fns: dict[int, Callable] = {}
+        self._chunk_fns: dict[tuple, Callable] = {}
+        self._write_chunk_fns: dict[int, Callable] = {}
+        self._admit_fns: dict[int, Callable] = {}
         self._set_pos = jax.jit(
             lambda s, i, v: s._replace(pos=s.pos.at[i].set(v)))
         self._mask_idle = jax.jit(
             lambda s, m: s._replace(pos=jnp.where(m, -1, s.pos)))
-        self.active_bucket: int | None = None
         self.releases = 0
         self.steps = 0
+        self._bw_log: list = []        # per-maintain counter snapshots
+        from repro.serve.sched import make_scheduler
+        self.scheduler = scheduler if scheduler is not None \
+            else make_scheduler(ec)
+        self.scheduler.bind(self)
 
     # -- request intake / scheduling ------------------------------------
 
     def submit(self, req: Request):
         req.arrived = time.time()
-        self.queue.append(req)
+        self.scheduler.submit(req)
 
-    def _pick(self, bucket_len: int | None) -> Request | None:
-        """Prefer a request whose target length lands in the active bucket
-        (straggler mitigation: uniform-ish finish times per batch)."""
-        if not self.queue:
-            return None
-        if bucket_len is None:
-            return self.queue.popleft()
-        for i, r in enumerate(self.queue):
-            if abs(r.max_new - bucket_len) <= self.ec.bucket:
-                del self.queue[i]
-                return r
-        return self.queue.popleft()
+    @property
+    def queue(self):
+        """The scheduler's queue view (greedy: the FIFO deque; chunked:
+        a snapshot across tenant queues)."""
+        return self.scheduler.queue
+
+    @property
+    def active_bucket(self):
+        """The greedy scheduler's wave anchor (None for schedulers
+        without straggler bucketing)."""
+        return getattr(self.scheduler, "active_bucket", None)
+
+    # -- scheduler-facing jitted primitives -------------------------------
+
+    def release_lane(self, state, lane: int):
+        """Recycle one lane's metadata (tiered: batched release across
+        layers; dense: no-op — the position mask hides stale rows)."""
+        if self._tiered:
+            state = self._release(state, jnp.int32(lane))
+            self.releases += 1
+        return state
+
+    def park_idle(self, state, idle):
+        """Park the masked lanes at pos = -1 (no writes, no reads, no
+        hotness)."""
+        return self._mask_idle(state, jnp.asarray(idle))
+
+    def set_pos(self, state, lane: int, pos: int):
+        return self._set_pos(state, jnp.int32(lane), jnp.int32(pos))
+
+    def chunk_buffers(self, P: int):
+        """Fresh chunked-prefill K/V buffers for a padded length P."""
+        from repro.models import init_chunk_buffers
+        return init_chunk_buffers(self.cfg, P)
+
+    def chunk_fwd(self, P: int, C: int) -> Callable:
+        """Jitted chunked-prefill forward (``serve.decode
+        .make_chunk_prefill_fn``; one compiled fn, re-traced per (padded
+        length, chunk size)): (params, chunk_tokens [1, C], buf_k, buf_v,
+        start) -> updated buffers with rows [start, start+C) written —
+        bit-identical to the matching rows of the one-shot forward."""
+        if "fn" not in self._chunk_fns:
+            from repro.serve.decode import make_chunk_prefill_fn
+            self._chunk_fns["fn"] = make_chunk_prefill_fn(self.cfg)
+        return self._chunk_fns["fn"]
+
+    def write_chunk(self, C: int) -> Callable:
+        """Jitted chunk ingest, keyed per chunk size: slices rows
+        [start, start+C) out of the accumulated buffers and hands them to
+        ``backend.write_prefill_chunk`` (tiered: routed page stores)."""
+        if C not in self._write_chunk_fns:
+            backend = self.backend
+
+            def fn(state, lane, bk, bv, start, length):
+                L, _, _, KV, hd = bk.shape
+                k = jax.lax.dynamic_slice(
+                    bk, (0, 0, start, 0, 0), (L, 1, C, KV, hd))[:, 0]
+                v = jax.lax.dynamic_slice(
+                    bv, (0, 0, start, 0, 0), (L, 1, C, KV, hd))[:, 0]
+                return backend.write_prefill_chunk(state, lane, k, v,
+                                                   start, length)
+
+            self._write_chunk_fns[C] = jax.jit(fn)
+
+        def call(state, lane, bk, bv, start, length):
+            return self._write_chunk_fns[C](
+                state, jnp.int32(lane), bk, bv, jnp.int32(start),
+                jnp.int32(length))
+        return call
+
+    def admit_fast(self, state, lane: int, length: int, n_pages: int):
+        """Direct-to-fast admission: promote the first ``n_pages`` prompt
+        pages of ``lane`` into every layer's fast pool (tiered only)."""
+        if n_pages not in self._admit_fns:
+            self._admit_fns[n_pages] = jax.jit(
+                lambda s, ln, le: self.backend.admit_prefix(s, ln, le,
+                                                            n_pages))
+        return self._admit_fns[n_pages](state, jnp.int32(lane),
+                                        jnp.int32(length))
+
+    def build_maintain_tenants(self, pols: tuple, quotas: tuple):
+        """Compile the multi-tenant maintenance pass against a static
+        tenant partition (called once by the QoS scheduler at bind)."""
+        self._maintain_tenants = jax.jit(
+            lambda s, lt: self.backend.maintain_tenants(s, lt, pols,
+                                                        quotas))
 
     # -- prefill ---------------------------------------------------------
 
@@ -215,9 +341,9 @@ class Engine:
             self._prefill_fns[P] = jax.jit(fn)
         return self._prefill_fns[P]
 
-    def _prefill_lane(self, state, lane: int, req: Request):
-        """Install ``req``'s prompt into ``lane``; returns (state, the
-        token the first decode step consumes)."""
+    def prefill_lane(self, state, lane: int, req: Request):
+        """One-shot prefill: install ``req``'s whole prompt into ``lane``;
+        returns (state, the token the first decode step consumes)."""
         prompt = np.asarray(req.prompt, np.int32).reshape(-1)
         assert prompt.size >= 1, "empty prompt"
         ctx = prompt[:-1]
@@ -227,9 +353,7 @@ class Engine:
         if ctx.size == 0:
             state = self._set_pos(state, jnp.int32(lane), jnp.int32(0))
             return state, int(prompt[-1])
-        # pad to a power of two (few jit keys), clamped to the cache
-        # capacity — the pad rows must still fit the lane
-        P = min(1 << (int(ctx.size) - 1).bit_length(), self.ec.max_len)
+        P = padded_len(int(ctx.size), self.ec.max_len)
         padded = np.zeros((1, P), np.int32)
         padded[0, :ctx.size] = ctx
         state = self._prefill_fn(P)(
@@ -239,70 +363,115 @@ class Engine:
 
     # -- decode loop ------------------------------------------------------
 
-    def _refill(self, state, tokens, lanes, finished):
-        """Recycle finished lanes (release their pages), fill empty lanes
-        from the queue (real prefill), park still-empty lanes at
-        pos = -1 so they neither write nor read nor heat anything."""
-        ec = self.ec
-        for i in range(ec.batch):
-            r = lanes[i]
-            if r is not None and r.done:
-                finished.append(r)
-                lanes[i] = None
-                if self._tiered:
-                    state = self._release(state, jnp.int32(i))
-                    self.releases += 1
-            if lanes[i] is None:
-                req = self._pick(self.active_bucket)
-                if req is None:
-                    continue
-                if self.active_bucket is None:
-                    self.active_bucket = req.max_new
-                lanes[i] = req
-                state, tok = self._prefill_lane(state, i, req)
-                tokens = tokens.at[i].set(tok)
-        idle = np.array([l is None for l in lanes])
-        if idle.any():
-            state = self._mask_idle(state, jnp.asarray(idle))
-        if idle.all() and not self.queue:
-            self.active_bucket = None       # the wave drained: re-anchor
-        return state, tokens
-
     def run(self, log: Callable[[str], None] = lambda s: None) -> list[Request]:
         ec = self.ec
+        sched = self.scheduler
         lanes: list[Request | None] = [None] * ec.batch
         state = self.backend.init_state(ec.batch, ec.max_len)
         tokens = jnp.zeros((ec.batch,), jnp.int32)
         finished: list[Request] = []
+        self._bw_log = []          # per-run series: init_state reset the
+                                   # backend counters this snapshots
 
-        state, tokens = self._refill(state, tokens, lanes, finished)
+        state, tokens = sched.refill(state, tokens, lanes, finished)
         while any(l is not None for l in lanes):
             logits, state = self._step(self.params, state, tokens)
             tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
             self.steps += 1
             if self._tiered and self.steps % ec.maintain_every == 0:
-                state = self._maintain(state)
+                state = sched.maintain(state)
+                self._bw_log.append((state.caches.promo_pages,
+                                     state.caches.demo_pages))
             nxt = np.asarray(tokens)
             pos = np.asarray(state.pos)
             now = time.time()
             for i, r in enumerate(lanes):
-                if r is None:
+                # lanes mid-chunk-ingest are parked: no token this step
+                if r is None or not sched.is_decoding(i):
                     continue
+                if not r.tokens:
+                    r.first_token_at = now
                 r.tokens.append(int(nxt[i]))
+                r.token_times.append(now)
                 if len(r.tokens) >= r.max_new or int(pos[i]) >= ec.max_len - 1:
                     r.done = True
+                    # each request's completion stamps ITS OWN clock —
+                    # latency is measured from its own enqueue time, not
+                    # the batch wave's anchor
                     r.done_at = now
             if self.steps % 16 == 0:
                 log(f"[engine] step {self.steps}, queue={len(self.queue)}, "
                     f"done={len(finished)}")
-            state, tokens = self._refill(state, tokens, lanes, finished)
+            state, tokens = sched.refill(state, tokens, lanes, finished)
         self.final_state = state            # introspection (tests, examples)
         return finished
+
+    # -- observability -----------------------------------------------------
 
     @property
     def counters(self) -> dict:
         """Tiered-backend metadata/migration counters summed over layers
-        (empty for the dense backend)."""
+        (empty for the dense backend), plus per-epoch migration-bandwidth
+        series: ``epoch_promo_bytes`` / ``epoch_demo_bytes`` hold the
+        bytes moved between consecutive maintain passes (the counters are
+        snapshotted per pass and differenced at read-out, so the decode
+        loop never blocks on a transfer)."""
         if not self._tiered or not hasattr(self, "final_state"):
             return {}
-        return self.backend.counters(self.final_state)
+        out = self.backend.counters(self.final_state)
+        if self._bw_log:
+            pb = self.backend.tcfg.page_bytes
+            promo = [int(np.asarray(p).sum()) for p, _ in self._bw_log]
+            demo = [int(np.asarray(d).sum()) for _, d in self._bw_log]
+            out["epoch_promo_bytes"] = [
+                (b - a) * pb for a, b in zip([0] + promo[:-1], promo)]
+            out["epoch_demo_bytes"] = [
+                (b - a) * pb for a, b in zip([0] + demo[:-1], demo)]
+        return out
+
+    def request_stats(self, requests: list[Request]) -> dict:
+        """Per-request latency statistics for a finished batch: aggregate
+        and per-tenant percentiles (ms) of end-to-end latency and time to
+        first token, a log-bucketed token-latency histogram (inter-token
+        gaps), and the scheduler's fairness counters.  Exported into the
+        benchmark JSON (``benchmarks/run.py --sched``) and consumed by
+        ``examples/engine_tiered.py``."""
+        def _ms(xs):
+            xs = np.asarray(sorted(xs), np.float64) * 1e3
+            if not xs.size:
+                return {}
+            return dict(n=int(xs.size), mean=float(xs.mean()),
+                        p50=float(np.percentile(xs, 50)),
+                        p99=float(np.percentile(xs, 99)),
+                        max=float(xs.max()))
+
+        def _hist(gaps_ms):
+            # log2 buckets from 0.25 ms: [.25, .5), [.5, 1), ... [>= 2^k]
+            edges = [0.25 * 2 ** i for i in range(12)]
+            counts = [0] * (len(edges) + 1)
+            for g in gaps_ms:
+                counts[int(np.searchsorted(edges, g, side="right"))] += 1
+            return dict(edges_ms=edges, counts=counts)
+
+        def _block(rs):
+            gaps = []                       # one latency per decoded token
+            for r in rs:
+                ts = [r.admitted_at] + list(r.token_times)
+                gaps += [1e3 * (b - a) for a, b in zip(ts, ts[1:])]
+            return dict(
+                latency_ms=_ms([r.latency for r in rs]),
+                ttft_ms=_ms([r.ttft for r in rs]),
+                queue_wait_ms=_ms([r.queue_wait for r in rs]),
+                tokens=sum(len(r.tokens) for r in rs),
+                token_latency_hist=_hist(gaps))
+
+        out = {"aggregate": _block(requests)}
+        tenants = sorted({r.tenant_id for r in requests})
+        if len(tenants) > 1:
+            out["tenants"] = {
+                t: _block([r for r in requests if r.tenant_id == t])
+                for t in tenants}
+        book = getattr(self.scheduler, "book", None)
+        if book is not None:
+            out["fairness"] = book.fairness()
+        return out

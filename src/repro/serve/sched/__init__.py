@@ -1,0 +1,33 @@
+"""serve/sched: continuous-batching request scheduling (DESIGN.md §9).
+
+The serving engine (``serve/engine.Engine``) owns the jitted decode /
+prefill / maintain / release primitives; everything *between* them —
+which request gets a lane, when a prompt's pages enter which tier, how
+the migration budget splits across tenants — is this subsystem's.  The
+engine delegates every refill/prefill/release decision to a
+``Scheduler``:
+
+  GreedyScheduler   PR 4's wave-refill behaviour bit for bit (the
+                    default): one-shot prefill at admission, straggler
+                    bucketing anchored per wave, single tenant;
+  ChunkedScheduler  chunked prefill (page-sized prompt chunks interleaved
+                    with the other lanes' decode steps, a bounded chunk
+                    budget per step — bit-identical logits to one-shot,
+                    tests/test_sched.py), multi-tenant QoS admission
+                    (weighted deficit round-robin with a starvation
+                    bound; ``fast_data_slots`` and the policy
+                    ``max_moves`` budget partitioned per tenant), and
+                    direct-to-fast admission at ingest (the on-demand
+                    policy decider's install, ``tiered.kvcache
+                    .admit_pages``).
+"""
+
+from .base import Scheduler, make_scheduler
+from .chunked import ChunkedScheduler
+from .greedy import GreedyScheduler
+from .qos import TenantBook, TenantConfig, resolve_tenants, split_slots
+
+__all__ = [
+    "ChunkedScheduler", "GreedyScheduler", "Scheduler", "TenantBook",
+    "TenantConfig", "make_scheduler", "resolve_tenants", "split_slots",
+]

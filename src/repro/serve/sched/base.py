@@ -1,0 +1,81 @@
+"""Scheduler protocol: the seam between the serving engine's jitted
+primitives and the request-level decisions above them (DESIGN.md §9).
+
+A scheduler is host-side and impure (deques, wall clocks, fairness
+counters); every device-state mutation goes through the engine's jitted
+helpers (``release_lane`` / ``prefill_lane`` / ``chunk_fwd`` +
+``write_chunk`` / ``admit_fast`` / ``park_idle`` / ``set_pos``), so the
+decode hot path stays exactly as compiled.
+"""
+
+from __future__ import annotations
+
+import warnings
+from typing import Protocol, runtime_checkable
+
+
+@runtime_checkable
+class Scheduler(Protocol):
+    """Owns the request queue(s), lane assignment and prefill pacing.
+
+    Life cycle: the engine constructs it (``make_scheduler``), ``bind``s
+    itself, then calls ``refill`` once before the decode loop and once
+    after every step, and ``maintain`` on the migration cadence.
+    """
+
+    def bind(self, engine) -> None:
+        """Attach the engine (and resolve tenant policies against its
+        backend).  Called once, before any other method."""
+        ...
+
+    def submit(self, req) -> None:
+        """Enqueue one request (``req.arrived`` already stamped)."""
+        ...
+
+    @property
+    def pending(self) -> int:
+        """Requests enqueued but not yet assigned to a lane."""
+        ...
+
+    def refill(self, state, tokens, lanes, finished):
+        """One admission/pacing pass: recycle finished lanes (release
+        their metadata), advance chunked prefills within the chunk
+        budget, admit queued requests to free lanes, park idle lanes at
+        pos = -1.  Mutates ``lanes``/``finished`` in place; returns the
+        new (state, tokens)."""
+        ...
+
+    def maintain(self, state):
+        """One migration-scheduler pass (the engine's ``maintain_every``
+        cadence): single-tenant schedulers forward to the backend's
+        global pass, QoS schedulers split the move budget per tenant."""
+        ...
+
+    def is_decoding(self, lane: int) -> bool:
+        """Is this lane emitting tokens this step?  (False while a lane's
+        prompt is still being chunk-ingested — the engine must not
+        harvest its logits.)"""
+        ...
+
+
+def make_scheduler(ec) -> "Scheduler":
+    """Resolve ``EngineConfig.scheduler``: "greedy" (the default, PR 4's
+    wave-refill behaviour bit for bit), "chunked" (chunked prefill +
+    multi-tenant QoS), or the DEPRECATED alias "wave" -> greedy."""
+    from .chunked import ChunkedScheduler
+    from .greedy import GreedyScheduler
+    kind = ec.scheduler
+    if kind == "wave":
+        warnings.warn(
+            "EngineConfig(scheduler=\"wave\") is a deprecated alias of the "
+            "implicit wave-refill path; use scheduler=\"greedy\" (same "
+            "behaviour) or \"chunked\" (chunked prefill + QoS admission)",
+            FutureWarning, stacklevel=2)   # FutureWarning: visible under
+                                           # default CLI warning filters
+        kind = "greedy"
+    if kind == "greedy":
+        return GreedyScheduler(ec)
+    if kind == "chunked":
+        return ChunkedScheduler(ec)
+    raise ValueError(
+        f"unknown scheduler {ec.scheduler!r} (want greedy|chunked)")

@@ -1,0 +1,167 @@
+"""Multi-tenant QoS: tenant config, fast-slot / move-budget partitioning,
+fairness counters, and starvation-free weighted admission (DESIGN.md §9).
+
+Trimma frees fast-tier capacity; this module decides *for whom* it is
+spent.  Each tenant brings a weight (its share of ``fast_data_slots`` and
+of admission bandwidth) and optionally its own ``core/policy`` preset
+(decider thresholds + ``max_moves`` migration budget; the hotness tracker
+is shared — it is state, laid out once per store).  Admission is weighted
+deficit round-robin with a hard starvation bound: a tenant with queued
+work is never skipped more than ``starvation_bound`` consecutive
+admissions, whatever the weights say.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Optional, Union
+
+from repro.core.policy import PolicyConfig, get_policy
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantConfig:
+    """One tenant's QoS contract.
+
+    weight       share of the fast-slot partition and of admission
+                 bandwidth (weighted deficit round-robin credit);
+    policy       per-tenant ``core/policy`` preset name or PolicyConfig
+                 (None: the engine's policy).  Deciders, thresholds and
+                 ``max_moves`` may differ per tenant; the tracker kind
+                 must match the engine's (validated at bind);
+    admit_pages  direct-to-fast pages at ingest.  None: decider-driven —
+                 admit (up to the engine's ``admit_pages`` cap) iff this
+                 tenant's policy decider is "on_demand", the cache-style
+                 install-on-first-touch scheme; 0 disables; > 0 forces.
+    """
+
+    name: str
+    weight: int = 1
+    policy: Union[PolicyConfig, str, None] = None
+    admit_pages: Optional[int] = None
+
+    def resolve_policy(self, default: PolicyConfig) -> PolicyConfig:
+        if self.policy is None:
+            return default
+        return get_policy(self.policy)
+
+
+def resolve_tenants(ec) -> tuple:
+    """EngineConfig.tenants, defaulting to one catch-all tenant."""
+    ts = tuple(ec.tenants or ())
+    if not ts:
+        ts = (TenantConfig("default"),)
+    names = [t.name for t in ts]
+    if len(set(names)) != len(names):
+        raise ValueError(f"duplicate tenant names: {names}")
+    if any(t.weight < 1 for t in ts):
+        raise ValueError("tenant weights must be >= 1")
+    return ts
+
+
+def split_slots(total: int, tenants) -> tuple:
+    """Partition ``total`` fast data slots across tenants proportionally
+    to weight (largest remainder, every tenant >= 1 slot when total
+    allows).  The quotas are the hard residency caps
+    ``core/policy.plan_tenants`` enforces at promotion planning time."""
+    wsum = sum(t.weight for t in tenants)
+    raw = [total * t.weight / wsum for t in tenants]
+    quotas = [int(r) for r in raw]
+    # largest remainder
+    rest = total - sum(quotas)
+    order = sorted(range(len(tenants)), key=lambda i: raw[i] - quotas[i],
+                   reverse=True)
+    for i in order[:rest]:
+        quotas[i] += 1
+    # floor of 1 while slots remain (steal from the largest)
+    for i in range(len(quotas)):
+        if quotas[i] == 0 and max(quotas) > 1:
+            quotas[quotas.index(max(quotas))] -= 1
+            quotas[i] = 1
+    return tuple(quotas)
+
+
+class TenantBook:
+    """Runtime tenant accounting: per-tenant queues, fairness counters,
+    and the starvation-bounded weighted admission picker."""
+
+    def __init__(self, tenants, starvation_bound: int = 8):
+        if starvation_bound < 1:
+            raise ValueError("starvation_bound must be >= 1")
+        self.tenants = tuple(tenants)
+        self.bound = starvation_bound
+        self.index = {t.name: i for i, t in enumerate(self.tenants)}
+        self.queues = [deque() for _ in self.tenants]
+        self.credit = [0] * len(self.tenants)
+        self.skips = [0] * len(self.tenants)
+        self.stats = [dict(submitted=0, admitted=0, finished=0, tokens=0,
+                           chunks=0, admitted_fast_pages=0, max_skips=0)
+                      for _ in self.tenants]
+
+    # -- queue plumbing ---------------------------------------------------
+
+    def tenant_of(self, req) -> int:
+        tid = getattr(req, "tenant_id", "default")
+        if tid not in self.index:
+            if len(self.tenants) == 1:
+                return 0                     # single-tenant: catch-all
+            raise KeyError(
+                f"request {req.rid}: unknown tenant {tid!r}; configured "
+                f"tenants: {sorted(self.index)}")
+        return self.index[tid]
+
+    def submit(self, req) -> None:
+        t = self.tenant_of(req)
+        self.queues[t].append(req)
+        self.stats[t]["submitted"] += 1
+
+    @property
+    def pending(self) -> int:
+        return sum(len(q) for q in self.queues)
+
+    # -- admission --------------------------------------------------------
+
+    def pick(self):
+        """Pop the next request to admit, or None.
+
+        Weighted deficit round-robin: every call credits each non-empty
+        tenant its weight and picks the largest credit — over time each
+        tenant's admission share tracks its weight.  Starvation bound: a
+        non-empty tenant skipped ``bound`` times in a row is picked
+        unconditionally (earliest-arrived head first among the starved),
+        so no weight ratio can starve anyone (tests/test_sched.py pins
+        skips <= bound)."""
+        live = [t for t, q in enumerate(self.queues) if q]
+        if not live:
+            return None
+        starved = [t for t in live if self.skips[t] >= self.bound]
+        if starved:
+            pick = min(starved, key=lambda t: self.queues[t][0].arrived)
+        else:
+            for t in live:
+                self.credit[t] += self.tenants[t].weight
+            pick = max(live, key=lambda t: (self.credit[t], -t))
+            self.credit[pick] -= sum(self.tenants[t].weight for t in live)
+        for t in live:
+            if t == pick:
+                self.skips[t] = 0
+            else:
+                self.skips[t] += 1
+                self.stats[t]["max_skips"] = max(self.stats[t]["max_skips"],
+                                                 self.skips[t])
+        self.stats[pick]["admitted"] += 1
+        return self.queues[pick].popleft()
+
+    # -- accounting -------------------------------------------------------
+
+    def finish(self, req) -> None:
+        t = self.tenant_of(req)
+        self.stats[t]["finished"] += 1
+        self.stats[t]["tokens"] += len(req.tokens)
+
+    def fairness(self) -> dict:
+        """Per-tenant fairness counters (exported into the benchmark
+        JSON by ``Engine.request_stats``)."""
+        return {t.name: dict(weight=t.weight, **s)
+                for t, s in zip(self.tenants, self.stats)}

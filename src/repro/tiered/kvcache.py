@@ -458,6 +458,83 @@ def prefill_tokens(cfg: TieredConfig, st: TieredState, seq, k, v,
         slow_v=st.slow_v.at[rows].set(pages_v, mode="drop"))
 
 
+def prefill_chunk(cfg: TieredConfig, st: TieredState, seq, k, v, start,
+                  length):
+    """Chunked prompt ingest (DESIGN.md §9): write tokens
+    ``[start, start + C)`` of sequence ``seq``, one chunk of a prompt
+    whose earlier chunks already landed.  Unlike ``prefill_tokens`` this
+    write ROUTES: each page goes to its *current* tier — the fast copy if
+    the page is resident (direct-to-fast admission at ingest,
+    ``admit_pages``), else the slow home — the same write-through rule
+    ``append_token`` follows, so ingest after admission (or after a
+    mid-ingest promotion by ``run_scheduler``) never leaves a stale fast
+    copy.
+
+    k, v: [C, KV, hd] post-RoPE chunk K/V.  ``start`` (traced int32) must
+    be page-aligned and every chunk except the last must cover whole
+    pages — each page row is ONE store, so a ragged chunk boundary inside
+    a page would zero the page's earlier tokens.  Tokens at positions
+    >= ``length`` are pad garbage masked downstream by ``seq_lens`` until
+    decode appends overwrite them (exactly ``prefill_tokens``'s
+    convention).  Applying the chunks of a prompt through this op is
+    bit-identical to one ``prefill_tokens`` pass over the whole prompt
+    when nothing is resident (tests/test_sched.py pins it)."""
+    C, KV, hd = k.shape
+    P = cfg.page_tokens
+    npages = -(-C // P)
+    start = jnp.asarray(start, jnp.int32)
+    length = jnp.asarray(length, jnp.int32)
+    dt = st.slow_k.dtype
+    pad = npages * P - C
+    pages_k = jnp.pad(k.astype(dt), ((0, pad), (0, 0), (0, 0))) \
+        .reshape(npages, P, KV, hd).transpose(0, 2, 1, 3)
+    pages_v = jnp.pad(v.astype(dt), ((0, pad), (0, 0), (0, 0))) \
+        .reshape(npages, P, KV, hd).transpose(0, 2, 1, 3)
+    seq = jnp.asarray(seq, jnp.int32)
+    j = start // P + jnp.arange(npages, dtype=jnp.int32)
+    ok = (j * P < length) & (j < cfg.max_pages_per_seq)
+    ids = logical_page(cfg, seq, jnp.clip(j, 0, cfg.max_pages_per_seq - 1))
+    entry = st.leaf_table[ids]
+    in_fast = entry != INVALID
+    fast_idx = jnp.where(ok & in_fast, entry, cfg.fast_slots)
+    slow_idx = jnp.where(ok & ~in_fast, ids, cfg.n_logical)
+    return st._replace(
+        fast_k=st.fast_k.at[fast_idx].set(pages_k, mode="drop"),
+        fast_v=st.fast_v.at[fast_idx].set(pages_v, mode="drop"),
+        slow_k=st.slow_k.at[slow_idx].set(pages_k, mode="drop"),
+        slow_v=st.slow_v.at[slow_idx].set(pages_v, mode="drop"))
+
+
+def admit_pages(cfg: TieredConfig, st: TieredState, seq, length,
+                n_pages: int) -> TieredState:
+    """Direct-to-fast admission at ingest (DESIGN.md §9): promote the
+    first ``n_pages`` pages of sequence ``seq`` (those holding tokens
+    below ``length``) into the fast pool NOW, instead of waiting for
+    decode touches to heat them — the cache-style on-demand install the
+    scheduler consults the policy decider for.  Each admitted page
+    records one tracker touch (install touch), so a maintain pass that
+    lands mid-ingest cannot demote it straight back as score-0 cold.
+
+    Chunk writes that follow route to the admitted fast copies
+    (``prefill_chunk``); the slow home then holds pre-ingest garbage
+    until demotion/eviction copies the fast bytes back — the standard
+    resident-page coherence rule (§3's write-through table applies at
+    ingest)."""
+    seq = jnp.asarray(seq, jnp.int32)
+    length = jnp.asarray(length, jnp.int32)
+    j = jnp.arange(int(n_pages), dtype=jnp.int32)
+    en = (j * cfg.page_tokens < length) & (j < cfg.max_pages_per_seq)
+    ids = logical_page(cfg, seq, jnp.clip(j, 0, cfg.max_pages_per_seq - 1))
+
+    def body(s, args):
+        pid, e = args
+        return migrate_one(cfg, s, pid, e), None
+
+    st, _ = jax.lax.scan(body, st, (ids, en))
+    return _tr_replace(st, pol_track.record(cfg.pol, _tr_view(cfg, st), ids,
+                                            now=_now(cfg, st), enable=en))
+
+
 def _leaf_hosting_slot(cfg: TieredConfig, leaf):
     """Leaf i is hosted at fast slot fast_data_slots + i (fixed location,
     Section 3.2)."""
@@ -630,17 +707,49 @@ def run_scheduler(cfg: TieredConfig, st: TieredState,
     """
     pol = cfg.pol
     mm = pol.max_moves if max_moves is None else int(max_moves)
+    sc, resident, now = _plan_inputs(cfg, st)
+    p = pol_sched.plan(pol, sc, resident, mm)
+    return _apply_plan(cfg, st, p, now)
+
+
+def run_scheduler_tenants(cfg: TieredConfig, st: TieredState, page_tenant,
+                          pols, quotas) -> TieredState:
+    """The multi-tenant maintenance pass (DESIGN.md §9): same scoring and
+    apply path as ``run_scheduler``, but the move queues come from
+    ``core/policy.plan_tenants`` — one bounded plan per tenant over its
+    own pages (``page_tenant`` [n_logical] int32; < 0 == unowned, moves
+    for nobody), each with its own decider thresholds + ``max_moves``
+    budget (``pols``, static tuple) and a fast-slot quota (``quotas``,
+    static tuple) its residency can never exceed.  The hotness trackers
+    are shared state — tenants may vary deciders and budgets, not the
+    tracker kind (the tracker arrays are laid out once per
+    ``TieredConfig``)."""
+    sc, resident, now = _plan_inputs(cfg, st)
+    p = pol_sched.plan_tenants(pols, sc, resident, page_tenant, quotas)
+    return _apply_plan(cfg, st, p, now)
+
+
+def _plan_inputs(cfg: TieredConfig, st: TieredState):
+    """Shared scoring front half of the maintenance pass: (scores [n],
+    residency [n], epoch now)."""
+    pol = cfg.pol
     n = cfg.n_logical
     now = _now(cfg, st)
-    tr = _tr_view(cfg, st)
-    sc = pol_track.score(pol, tr, now=now)[:n]
+    sc = pol_track.score(pol, _tr_view(cfg, st), now=now)[:n]
     if pol.decider == "write_aware":
         # one write-weighted score for gate AND demote ranking: touch holds
         # R + W (base weight), wtouch holds W, so this is R + write_weight*W
         # — the same accumulation the simulator gate makes per access
         sc = sc + (pol.write_weight - 1) * st.wtouch[:n]
     resident = st.leaf_table[:n] != INVALID
-    p = pol_sched.plan(pol, sc, resident, mm)
+    return sc, resident, now
+
+
+def _apply_plan(cfg: TieredConfig, st: TieredState, p, now) -> TieredState:
+    """Shared apply tail: demotions, then promotions, then tracker
+    forget/decay and the epoch advance."""
+    pol = cfg.pol
+    n = cfg.n_logical
 
     def dbody(s, args):
         pid, en = args

@@ -131,6 +131,51 @@ def test_tiered_lookup_identity(pages):
 
 
 # ---------------------------------------------------------------------------
+# multi-tenant QoS: plan_tenants conserves budgets, quotas and membership
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(st.data())
+def test_plan_tenants_conservation(data):
+    from repro.core.policy import get_policy, plan_tenants
+
+    n = data.draw(st.integers(8, 64))
+    T = data.draw(st.integers(1, 4))
+    pols = tuple(get_policy(
+        data.draw(st.sampled_from(["threshold", "on_demand", "write_aware"])),
+        max_moves=data.draw(st.integers(1, 4))) for _ in range(T))
+    quotas = tuple(data.draw(st.integers(0, 6)) for _ in range(T))
+    score = jnp.asarray(data.draw(st.lists(st.integers(0, 9), min_size=n,
+                                           max_size=n)), jnp.int32)
+    resident = jnp.asarray(data.draw(st.lists(st.booleans(), min_size=n,
+                                              max_size=n)))
+    group = jnp.asarray(data.draw(st.lists(st.integers(-1, T - 1),
+                                           min_size=n, max_size=n)),
+                        jnp.int32)
+    p = plan_tenants(pols, score, resident, group, quotas)
+    g, res = np.asarray(group), np.asarray(resident)
+    pid, pen = np.asarray(p.promote_ids), np.asarray(p.promote_en)
+    did, den = np.asarray(p.demote_ids), np.asarray(p.demote_en)
+    # total moves <= sum of tenant budgets
+    assert pen.sum() + den.sum() <= sum(pol.max_moves for pol in pols)
+    off = 0
+    for t, (pol, quota) in enumerate(zip(pols, quotas)):
+        sl = slice(off, off + pol.max_moves)
+        # per tenant: budget, membership, residency direction, quota cap
+        assert pen[sl].sum() + den[sl].sum() <= pol.max_moves
+        assert (g[pid[sl][pen[sl]]] == t).all()
+        assert (g[did[sl][den[sl]]] == t).all()
+        assert (~res[pid[sl][pen[sl]]]).all()
+        assert res[did[sl][den[sl]]].all()
+        assert (res & (g == t)).sum() + pen[sl].sum() <= max(
+            quota, (res & (g == t)).sum())
+        off += pol.max_moves
+    # enabled ids are unique (no double move)
+    moved = np.concatenate([pid[pen], did[den]])
+    assert len(np.unique(moved)) == len(moved)
+
+
+# ---------------------------------------------------------------------------
 # optimizer: AdamW minimises a convex quadratic
 # ---------------------------------------------------------------------------
 
