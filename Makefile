@@ -3,7 +3,7 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: verify test bench-smoke bench-serve bench-engine bench-sched \
-	bench golden examples-smoke
+	obs-smoke bench golden examples-smoke
 
 verify: test bench-smoke examples-smoke
 
@@ -35,6 +35,15 @@ bench-engine:
 bench-sched:
 	$(PY) -m benchmarks.run --sched
 	$(PY) -m benchmarks.check_bench BENCH_smoke.json sched
+
+# observability smoke (DESIGN.md §10): metrics-on vs metrics-off engine
+# runs on the same trace; emits + validates BENCH_obs_prom.txt (Prometheus
+# text exposition, >= 12 metric families), BENCH_obs_trace.json (Perfetto-
+# loadable) and BENCH_obs_metrics.jsonl; the gate requires bit-identical
+# logits and <= 3% decode-throughput overhead
+obs-smoke:
+	$(PY) -m benchmarks.run --obs
+	$(PY) -m benchmarks.check_bench BENCH_smoke.json obs
 
 # every example on a tiny geometry (EXAMPLES_SMOKE=1), so the demos can't
 # silently rot — CI runs this too

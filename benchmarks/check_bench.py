@@ -24,10 +24,15 @@ two-tenant mixed prompt-length trace, chunked prefill + QoS admission
 improves the interactive tenant's p99 request latency over greedy
 wave-refill without reducing aggregate tokens/s by more than 5%.
 
+obs (the telemetry PR's contract, ``make obs-smoke``): with the unified
+metrics/trace pipeline enabled the decode logits stay bit-identical,
+tokens/s regresses <= 3%, and the run really emitted a Prometheus
+exposition (>= 12 metric families) and a non-empty Perfetto trace.
+
 With no section arguments the serve_decode + engine_decode contracts are
 enforced (the CI smoke run writes both); ``make bench-serve`` /
-``make bench-engine`` / ``make bench-sched`` pass their own section so
-the standalone targets stay self-contained.
+``make bench-engine`` / ``make bench-sched`` / ``make obs-smoke`` pass
+their own section so the standalone targets stay self-contained.
 """
 
 from __future__ import annotations
@@ -93,8 +98,35 @@ def _check_sched(sd) -> bool:
     return served_ok and p99_ok and tput_ok
 
 
+def _check_obs(od) -> bool:
+    """The observability contract (DESIGN.md §10, ``make obs-smoke``):
+    telemetry must be invisible to the math (metrics-on logits bit
+    identical to metrics-off), nearly invisible to the clock (tokens/s
+    ratio >= 0.97), and the emitted artifacts must be real — a Prometheus
+    exposition with >= 12 metric families and a non-empty Perfetto
+    trace."""
+    parity_ok = od["logits_max_abs_diff"] == 0.0
+    ratio = od["tokens_ratio"]
+    tput_ok = ratio >= 0.97
+    fams = od["n_metric_families"]
+    fams_ok = fams >= 12
+    trace_ok = od["trace_events"] > 0
+    print(f"obs: logits max|diff| metrics-on vs off = "
+          f"{od['logits_max_abs_diff']:.1e} "
+          f"[{'OK' if parity_ok else 'NOT BIT-IDENTICAL'}]")
+    print(f"obs: step floor {od['metrics_on']['step_floor_us']:.0f}us vs "
+          f"{od['metrics_off']['step_floor_us']:.0f}us metrics-off "
+          f"(tok/s ratio {ratio:.3f}) "
+          f"[{'OK' if tput_ok else 'REGRESSED'}]")
+    print(f"obs: {fams} metric families in the exposition "
+          f"[{'OK' if fams_ok else 'TOO FEW (< 12)'}]")
+    print(f"obs: {od['trace_events']} trace events, span phases "
+          f"{od['trace_span_phases']} [{'OK' if trace_ok else 'EMPTY'}]")
+    return parity_ok and tput_ok and fams_ok and trace_ok
+
+
 _CHECKS = {"serve_decode": _check_serve, "engine_decode": _check_engine,
-           "sched": _check_sched}
+           "sched": _check_sched, "obs": _check_obs}
 
 
 def check(path: str = "BENCH_smoke.json",

@@ -31,6 +31,21 @@ import jax.numpy as jnp
 
 from repro.kernels.irt_lookup.irt_lookup import irt_lookup
 from repro.kernels.irt_lookup.ref import irt_lookup_ref
+from repro.obs.registry import MetricSpec, register
+
+# canonical metric names for the walk path (DESIGN.md §10): translated
+# pages are the lookup lanes the metadata engine actually resolved; a
+# walk is one parallel two-level probe (per-level touches == walks x
+# levels, both levels probed concurrently — Section 3.2)
+register(
+    MetricSpec("trimma_translated_pages_total", "counter",
+               "logical pages translated by the metadata engine (iRC "
+               "probe + iRT walk; cached device-table rows never reach "
+               "it)"),
+    MetricSpec("trimma_irt_walks_total", "counter",
+               "two-level iRT walks (one per iRC miss; each walk "
+               "touches both levels in parallel)"),
+)
 
 INVALID = -1
 E = 64                     # entries per leaf block (256 B / 4 B, Section 3.2)

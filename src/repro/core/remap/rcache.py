@@ -42,8 +42,23 @@ import dataclasses
 
 import jax.numpy as jnp
 
+from repro.obs.registry import MetricSpec, register
+
 IDENTITY = -1
 _HASH_MULT = 2654435761  # Knuth multiplicative hash
+
+# canonical metric names for the counters this module's probes feed
+# (accumulated in TieredState / the simulator scan state; read out by the
+# obs.metrics taps — DESIGN.md §10)
+register(
+    MetricSpec("trimma_irc_hits_total", "counter",
+               "iRC hits (NonIdCache + IdCache) on the serving lookup "
+               "path"),
+    MetricSpec("trimma_irc_id_hits_total", "counter",
+               "iRC IdCache (identity sector-vector) hits"),
+    MetricSpec("trimma_irc_misses_total", "counter",
+               "iRC misses — each one walks the iRT"),
+)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -38,6 +38,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import metrics as obs_metrics
+from repro.obs import registry as obs_registry
+
 from .config import IDENTITY, SimConfig
 from .policy import access as pol_access
 from .policy.config import PolicyConfig, get_policy
@@ -59,12 +62,11 @@ __all__ = [
 # state
 # ---------------------------------------------------------------------------
 
-COUNTERS = [
-    "n_acc", "rc_hit", "rc_id_hit", "rc_nid_hit", "rc_incons", "serve_fast",
-    "installs", "swaps", "forced_evict", "writebacks", "walks", "deallocs",
-    "cyc_sram", "cyc_meta", "cyc_fast", "cyc_slow",
-    "by_fast", "by_slow_rd", "by_slow_wr",
-]
+# the in-state counter keys, declared once in the metric registry
+# (obs/registry.SIM_COUNTERS maps each onto its canonical sim_* name —
+# the order and spelling here are the golden-counter contract,
+# tests/golden/sim_counters.json)
+COUNTERS = obs_registry.sim_counter_keys()
 
 
 def init_state(cfg: SimConfig, g: Geometry) -> dict:
@@ -100,7 +102,7 @@ _madd, _mset = pol_access.masked_add, pol_access.masked_set
 
 
 def _bump(st, name, delta):
-    st[name] = st[name] + jnp.asarray(delta, jnp.int32)
+    st[name] = obs_metrics.bump(st[name], delta)
 
 
 def _lane(x) -> jnp.ndarray:

@@ -67,6 +67,17 @@ def main():
     ap.add_argument("--admit-pages", type=int, default=2,
                     help="direct-to-fast pages per ingest for on-demand "
                          "tenants (DESIGN.md §9 invalidation note)")
+    ap.add_argument("--prom-out", default=None,
+                    help="write the Prometheus text exposition here at "
+                         "drain (DESIGN.md §10)")
+    ap.add_argument("--metrics-jsonl", default=None,
+                    help="append one JSON metrics sample per "
+                         "--obs-every steps to this file")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Chrome-trace-event JSON (open in "
+                         "https://ui.perfetto.dev) of the engine phases")
+    ap.add_argument("--obs-every", type=int, default=4,
+                    help="engine steps between metric samples")
     args = ap.parse_args()
 
     import jax
@@ -86,12 +97,19 @@ def main():
               file=sys.stderr)
     tenants = _parse_tenants(args.tenants) if args.tenants else ()
     params = init_params(cfg, jax.random.key(0))
+    obs = None
+    if args.prom_out or args.metrics_jsonl or args.trace_out:
+        from repro.obs import ObsConfig
+        obs = ObsConfig(sample_every=args.obs_every,
+                        prom_path=args.prom_out,
+                        jsonl_path=args.metrics_jsonl,
+                        trace_path=args.trace_out)
     try:
         eng = Engine(cfg, params, EngineConfig(
             batch=args.batch, max_len=args.max_len, backend=args.backend,
             policy=args.policy, scheduler=args.scheduler or "greedy",
             prefill_chunk=args.prefill_chunk, tenants=tenants,
-            admit_pages=args.admit_pages))
+            admit_pages=args.admit_pages, obs=obs))
     except NotImplementedError as e:
         raise SystemExit(f"{cfg.name}: {e}")
     rng = np.random.default_rng(0)
@@ -109,12 +127,20 @@ def main():
           f"({tok/dt:.1f} tok/s)")
     stats = eng.request_stats(done)
     lat = stats["aggregate"]["latency_ms"]
-    print(f"latency p50 {lat['p50']:.1f} ms, p99 {lat['p99']:.1f} ms "
-          f"(ttft p50 {stats['aggregate']['ttft_ms']['p50']:.1f} ms)")
+    ttft = stats["aggregate"]["ttft_ms"]
+    if lat and ttft:     # empty when no request finished (e.g. 0 requests)
+        print(f"latency p50 {lat['p50']:.1f} ms, p99 {lat['p99']:.1f} ms "
+              f"(ttft p50 {ttft['p50']:.1f} ms)")
     if "fairness" in stats:
         print(f"fairness: {stats['fairness']}")
     if eng.counters:
         print(f"tiered counters: {eng.counters}")
+    if obs is not None:
+        for label, path in (("prometheus", args.prom_out),
+                            ("metrics jsonl", args.metrics_jsonl),
+                            ("perfetto trace", args.trace_out)):
+            if path:
+                print(f"obs: {label} -> {path}")
 
 
 if __name__ == "__main__":

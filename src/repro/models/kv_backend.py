@@ -304,16 +304,18 @@ class TieredBackend:
                                                 pols, quotas))(state.caches)
         return state._replace(caches=caches)
 
+    def metrics(self, state) -> dict:
+        """Canonical telemetry view (DESIGN.md §10): the obs tap summed
+        over the layer axis, concrete Python ints."""
+        from repro.serve import tiered as srv
+        return {k: int(v)
+                for k, v in srv.metrics(self.tcfg, state.caches).items()}
+
     def counters(self, state) -> dict:
-        """Aggregate per-layer counters (summed over the layer axis)."""
-        c, t = state.caches, self.tcfg
-        tot = lambda x: int(jnp.sum(x))  # noqa: E731
-        return dict(
-            lookups=tot(c.lookups), dev_hits=tot(c.dev_hits),
-            irc_hits=tot(c.irc_hits), migrations=tot(c.migrations),
-            demotions=tot(c.demotions), forced_evict=tot(c.forced_evict),
-            promo_bytes=tot(c.promo_pages) * t.page_bytes,
-            demo_bytes=tot(c.demo_pages) * t.page_bytes)
+        """Aggregate per-layer counters (summed over the layer axis) under
+        the legacy short keys — re-derived from the canonical view."""
+        from repro.obs.metrics import legacy_counters
+        return legacy_counters(self.metrics(state))
 
 
 def make_backend(cfg: ArchConfig, kind: str, batch: int, max_len: int,

@@ -1,0 +1,21 @@
+"""Unified telemetry layer (DESIGN.md §10).
+
+Three pieces, one namespace:
+
+  ``obs.registry``  metric specs — every subsystem declares its metrics
+                    next to the code that owns them;
+  ``obs.metrics``   JIT-safe in-graph metrics pytree ops + the taps that
+                    read the existing in-graph counter state
+                    (``TieredState``, the simulator scan state) out
+                    under canonical names;
+  ``obs.hub``       host-side MetricsHub — snapshot/delta samples,
+                    JSONL time series, Prometheus text exposition;
+  ``obs.trace``     structured step tracer — Chrome-trace-event JSON
+                    (Perfetto) spans per engine phase, plus optional
+                    ``jax.profiler`` hooks.
+"""
+
+from . import metrics, registry, trace  # noqa: F401
+from .hub import MetricsHub, ObsConfig, parse_prometheus  # noqa: F401
+from .registry import MetricSpec, register  # noqa: F401
+from .trace import NULL_TRACER, StepTracer  # noqa: F401

@@ -1,0 +1,170 @@
+"""JIT-safe in-graph metrics: a plain pytree of named int32 arrays plus
+the pure ops that grow it, and the *taps* that read the repo's existing
+in-graph counter state out under canonical metric names (DESIGN.md §10).
+
+Design rules:
+  * a metrics pytree is just ``dict[str, jnp.ndarray]`` — it threads
+    through ``jit`` / ``lax.scan`` / ``vmap`` like any other state, and
+    ``vmap`` over lanes or layers simply adds a leading axis the tap
+    sums away at read-out;
+  * every op is pure (returns the new value) and masked ops use the
+    same enabled-lane semantics as the rest of the codebase (disabled
+    lanes contribute nothing);
+  * histograms are fixed-size log₂-bucket count vectors (the same
+    buckets everywhere: ``HIST_EDGES_MS`` — the engine's token-latency
+    histogram, the hub's exposition and the tests all share them).
+
+The taps (``tiered_metrics``, ``sim_metrics``) are the migration path
+for the scattered counters this layer unifies: the iRC/iRT/migration
+counters already accumulate inside ``TieredState`` / the simulator's
+scan state; the tap is the single place that maps them onto the
+canonical namespace (``obs.registry``), derives the composed metrics
+(misses, walks, residency), and sums the layer axis of a stacked store.
+"""
+
+from __future__ import annotations
+
+import types
+
+import jax.numpy as jnp
+import numpy as np
+
+from .registry import LEGACY_TIERED, TIERED_FIELDS, sim_export  # noqa: F401
+
+# one log2 histogram geometry for every latency histogram in the repo:
+# buckets [0, .25), [.25, .5), ..., [256, 512), [512, inf) ms
+HIST_EDGES_MS = tuple(0.25 * 2 ** i for i in range(12))
+HIST_BUCKETS = len(HIST_EDGES_MS) + 1
+
+
+# ---------------------------------------------------------------------------
+# in-graph ops (pure; jit/vmap/scan-safe)
+# ---------------------------------------------------------------------------
+
+def zeros(names) -> dict:
+    """Fresh metrics pytree: one int32 scalar per name."""
+    return {n: jnp.zeros((), jnp.int32) for n in names}
+
+
+def bump(value, delta):
+    """One counter bump (int32 accumulate — the same arithmetic the
+    simulator's ``_bump`` always used)."""
+    return value + jnp.asarray(delta, jnp.int32)
+
+
+def inc(m: dict, name: str, delta=1, enable=None) -> dict:
+    """Counter increment, optionally masked: ``enable`` may be a bool
+    scalar or a lane vector (its enabled-lane count is added)."""
+    if enable is not None:
+        delta = jnp.sum(jnp.asarray(enable, jnp.int32)
+                        * jnp.asarray(delta, jnp.int32))
+    return {**m, name: bump(m[name], delta)}
+
+
+def hist_zeros() -> jnp.ndarray:
+    """Fresh log2-bucket histogram counts [HIST_BUCKETS] int32."""
+    return jnp.zeros((HIST_BUCKETS,), jnp.int32)
+
+
+def bucket_index(value_ms):
+    """Bucket index for a latency in ms (host/np or traced/jnp).  Edge
+    values belong to the bucket they open: 0.25 ms -> bucket 1."""
+    edges = np.asarray(HIST_EDGES_MS)
+    if isinstance(value_ms, jnp.ndarray):
+        return jnp.searchsorted(jnp.asarray(edges), value_ms, side="right")
+    return int(np.searchsorted(edges, value_ms, side="right"))
+
+
+def hist_observe(counts, values_ms, enable=None):
+    """Scatter a batch of latency observations into the bucket counts.
+    ``values_ms`` [N] float; disabled lanes (``enable`` [N] bool) drop
+    out of bounds and count nothing.  Pure; vmap-safe over lanes."""
+    values_ms = jnp.atleast_1d(jnp.asarray(values_ms))
+    idx = jnp.searchsorted(jnp.asarray(HIST_EDGES_MS), values_ms,
+                           side="right").astype(jnp.int32)
+    if enable is not None:
+        idx = jnp.where(jnp.atleast_1d(jnp.asarray(enable, bool)), idx,
+                        HIST_BUCKETS)
+    return counts.at[idx].add(1, mode="drop")
+
+
+def merge(a: dict, b: dict) -> dict:
+    """Sum two metrics pytrees (same keys) — e.g. per-shard partials."""
+    assert a.keys() == b.keys(), (sorted(a), sorted(b))
+    return {k: a[k] + b[k] for k in a}
+
+
+def delta(cur: dict, prev: dict) -> dict:
+    """Counter deltas between two snapshots (keys present in both)."""
+    return {k: cur[k] - prev[k] for k in cur if k in prev}
+
+
+# ---------------------------------------------------------------------------
+# taps: existing in-graph counter state -> canonical namespace
+# ---------------------------------------------------------------------------
+
+_INVALID = -1   # core/remap INVALID (duck-typed here to avoid the import)
+
+
+def tiered_metrics(st, page_bytes: int) -> dict:
+    """Canonical metric view of a tiered KV store's in-graph counters.
+
+    ``st`` is a ``TieredState`` — or a *stacked* one ([L, ...] leaves
+    under the engine's layer axis, or any vmapped stack): every reduction
+    below sums all axes, so one tap serves the single-store driver, the
+    full-model backend and vmapped sweeps alike.  Values are traced
+    jnp scalars inside jit, concrete outside; ``page_bytes`` converts the
+    int32-safe page counts into bandwidth bytes at read-out (the same
+    rule the legacy counters used).
+    """
+    g = lambda f: jnp.sum(getattr(st, f))  # noqa: E731
+    out = {canon: g(field) for field, canon in TIERED_FIELDS.items()}
+    # derived: an iRC miss is a walk of the iRT (the engine probes the
+    # cache first and walks only on a miss — Figure 4's flow)
+    misses = out["trimma_translated_pages_total"] - out["trimma_irc_hits_total"]
+    out["trimma_irc_misses_total"] = misses
+    out["trimma_irt_walks_total"] = misses
+    out["trimma_promoted_bytes_total"] = g("promo_pages") * page_bytes
+    out["trimma_demoted_bytes_total"] = g("demo_pages") * page_bytes
+    # gauges: current residency / metadata footprint (Figure 9 analogue)
+    out["trimma_fast_resident_pages"] = jnp.sum(st.slot_owner != _INVALID)
+    out["trimma_metadata_pages"] = jnp.sum(st.leaf_cnt > 0)
+    return out
+
+
+#: every TieredState field ``tiered_metrics`` reads — the stashable
+#: subset (small counter/occupancy arrays, never the KV pools)
+TAP_FIELDS = tuple(TIERED_FIELDS) + ("promo_pages", "demo_pages",
+                                     "slot_owner", "leaf_cnt")
+
+
+def tap_stash(st) -> dict:
+    """Reference-only snapshot of the tap's inputs, ~µs: jax arrays are
+    immutable, so grabbing the field references *is* the snapshot.  The
+    engine stashes one per sample inside the decode loop and defers all
+    compute/transfer to drain (``stashed_metrics`` over the batch)."""
+    return {f: getattr(st, f) for f in TAP_FIELDS}
+
+
+def stashed_metrics(stash: dict, page_bytes: int) -> dict:
+    """``tiered_metrics`` over a ``tap_stash`` dict.  The dict is a plain
+    pytree, so this wrapper is what jit/vmap see: vmapping it over a
+    stacked batch of stashes yields every sample's metrics in one call."""
+    return tiered_metrics(types.SimpleNamespace(**stash), page_bytes)
+
+
+def legacy_counters(metrics: dict) -> dict:
+    """Canonical metric dict -> the legacy short-key counters dict
+    (``TieredServer.counters`` / ``TieredBackend.counters`` contract)."""
+    return {short: metrics[canon] for short, canon in LEGACY_TIERED.items()
+            if canon in metrics}
+
+
+def sim_metrics(counters: dict) -> dict:
+    """Simulator counters (``core/simulator.run`` output or scan state)
+    under canonical ``sim_*`` names, plus the derived iRC miss count."""
+    out = sim_export(counters)
+    if {"sim_accesses_total", "sim_rc_hits_total"} <= out.keys():
+        out["sim_rc_misses_total"] = (out["sim_accesses_total"]
+                                      - out["sim_rc_hits_total"])
+    return out

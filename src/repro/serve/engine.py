@@ -48,7 +48,39 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.models import decode_step, forward
 from repro.models.kv_backend import TieredBackend, make_backend
+from repro.obs import NULL_TRACER, MetricsHub, ObsConfig, StepTracer
+from repro.obs import metrics as obs_metrics
+from repro.obs.registry import MetricSpec, register
+from repro.obs.trace import profiler_trace
 from repro.serve.decode import make_tiered_decode_step
+
+# canonical serving-engine metrics (DESIGN.md §10).  The trimma_* families
+# are declared by the modules that own them (core/remap, core/policy,
+# tiered/kvcache); these are the engine loop's own books.
+register(
+    MetricSpec("engine_steps_total", "counter",
+               "decode steps executed"),
+    MetricSpec("engine_tokens_total", "counter",
+               "tokens harvested from decoding lanes"),
+    MetricSpec("engine_finished_requests_total", "counter",
+               "requests fully decoded"),
+    MetricSpec("engine_releases_total", "counter",
+               "lane metadata recycles (tiered release passes)"),
+    MetricSpec("engine_queue_depth", "gauge",
+               "requests waiting in the scheduler queue"),
+    MetricSpec("engine_active_lanes", "gauge",
+               "lanes holding a live request"),
+    MetricSpec("engine_translated_pages_per_step", "gauge",
+               "metadata-engine translations per decode step (live pages "
+               "that missed the cached device table)"),
+    MetricSpec("engine_request_latency_ms", "gauge",
+               "request latency percentiles "
+               '(labels: tenant, stat in latency|ttft|queue_wait, '
+               "quantile)", unit="ms"),
+    MetricSpec("engine_token_latency_ms", "histogram",
+               "inter-token latency (log2 buckets from 0.25 ms)",
+               unit="ms"),
+)
 
 
 @dataclasses.dataclass
@@ -103,6 +135,11 @@ class EngineConfig:
     tenants: tuple = ()           # TenantConfig per tenant (empty: one
                                   # default tenant)
     starvation_bound: int = 8     # QoS: max admission skips in a row
+    # observability (DESIGN.md §10): None = metrics/tracing fully off (the
+    # decode loop stays span- and sample-free); an ObsConfig turns on
+    # periodic MetricsHub samples and, when paths are set, the Prometheus
+    # exposition / JSONL series / Perfetto trace written at drain
+    obs: ObsConfig | None = None
 
 
 class TieredServer:
@@ -145,13 +182,16 @@ class TieredServer:
         self.state = self._release(self.state, jnp.int32(seq))
 
     @property
+    def metrics(self) -> dict:
+        """Canonical telemetry view of the store (obs tap, DESIGN.md §10)."""
+        from repro.serve import tiered as srv
+        return {k: int(v)
+                for k, v in srv.metrics(self.cfg, self.state).items()}
+
+    @property
     def counters(self) -> dict:
-        s = self.state
-        return dict(lookups=int(s.lookups), dev_hits=int(s.dev_hits),
-                    irc_hits=int(s.irc_hits), migrations=int(s.migrations),
-                    demotions=int(s.demotions),
-                    promo_bytes=int(s.promo_pages) * self.cfg.page_bytes,
-                    demo_bytes=int(s.demo_pages) * self.cfg.page_bytes)
+        """Legacy short-key counters, re-derived from the canonical view."""
+        return obs_metrics.legacy_counters(self.metrics)
 
 
 _PREFILL_FAMILIES = ("dense", "moe")
@@ -227,6 +267,29 @@ class Engine:
         self.scheduler = scheduler if scheduler is not None \
             else make_scheduler(ec)
         self.scheduler.bind(self)
+        # observability (DESIGN.md §10): hub + tracer only when configured;
+        # NULL_TRACER keeps the hot loop's span sites branch-free.  A
+        # sample inside the loop only stashes array references (tap_stash)
+        # — the batched jitted tap turns ALL samples' counter reductions
+        # into one compiled call + one transfer at drain
+        self.hub: MetricsHub | None = \
+            MetricsHub(ec.obs) if ec.obs is not None else None
+        self.tracer = StepTracer() \
+            if ec.obs is not None and ec.obs.trace_path else NULL_TRACER
+        if self._tiered and ec.obs is not None:
+            from repro.serve import tiered as srv
+            tcfg = self.backend.tcfg
+            self._tap = jax.jit(lambda c: srv.metrics(tcfg, c))
+            self._batch_tap = jax.jit(lambda taps: jax.vmap(
+                lambda s: obs_metrics.stashed_metrics(
+                    s, page_bytes=tcfg.page_bytes))(
+                jax.tree.map(lambda *xs: jnp.stack(xs), *taps)))
+        self._pending_obs: list[dict] = []
+        self._tokens_out = 0           # tokens harvested (engine_tokens_total)
+        # optional per-step logits capture (set to [] before run()):
+        # benchmarks/run.py's obs section uses it to assert metrics-on
+        # decode stays bit-identical to metrics-off
+        self.logits_log: list | None = None
 
     # -- request intake / scheduling ------------------------------------
 
@@ -252,7 +315,8 @@ class Engine:
         """Recycle one lane's metadata (tiered: batched release across
         layers; dense: no-op — the position mask hides stale rows)."""
         if self._tiered:
-            state = self._release(state, jnp.int32(lane))
+            with self.tracer.span("release", lane=lane):
+                state = self._release(state, jnp.int32(lane))
             self.releases += 1
         return state
 
@@ -299,9 +363,11 @@ class Engine:
             self._write_chunk_fns[C] = jax.jit(fn)
 
         def call(state, lane, bk, bv, start, length):
-            return self._write_chunk_fns[C](
-                state, jnp.int32(lane), bk, bv, jnp.int32(start),
-                jnp.int32(length))
+            with self.tracer.span("prefill_chunk", lane=lane,
+                                  start=int(start), tokens=C):
+                return self._write_chunk_fns[C](
+                    state, jnp.int32(lane), bk, bv, jnp.int32(start),
+                    jnp.int32(length))
         return call
 
     def admit_fast(self, state, lane: int, length: int, n_pages: int):
@@ -311,8 +377,9 @@ class Engine:
             self._admit_fns[n_pages] = jax.jit(
                 lambda s, ln, le: self.backend.admit_prefix(s, ln, le,
                                                             n_pages))
-        return self._admit_fns[n_pages](state, jnp.int32(lane),
-                                        jnp.int32(length))
+        with self.tracer.span("admit_fast", lane=lane, pages=n_pages):
+            return self._admit_fns[n_pages](state, jnp.int32(lane),
+                                            jnp.int32(length))
 
     def build_maintain_tenants(self, pols: tuple, quotas: tuple):
         """Compile the multi-tenant maintenance pass against a static
@@ -356,9 +423,11 @@ class Engine:
         P = padded_len(int(ctx.size), self.ec.max_len)
         padded = np.zeros((1, P), np.int32)
         padded[0, :ctx.size] = ctx
-        state = self._prefill_fn(P)(
-            self.params, state, jnp.int32(lane), jnp.asarray(padded),
-            jnp.int32(ctx.size))
+        with self.tracer.span("prefill", lane=lane, rid=req.rid,
+                              tokens=int(ctx.size), padded=P):
+            state = self._prefill_fn(P)(
+                self.params, state, jnp.int32(lane), jnp.asarray(padded),
+                jnp.int32(ctx.size))
         return state, int(prompt[-1])
 
     # -- decode loop ------------------------------------------------------
@@ -366,47 +435,144 @@ class Engine:
     def run(self, log: Callable[[str], None] = lambda s: None) -> list[Request]:
         ec = self.ec
         sched = self.scheduler
+        obs, tracer = ec.obs, self.tracer
         lanes: list[Request | None] = [None] * ec.batch
         state = self.backend.init_state(ec.batch, ec.max_len)
         tokens = jnp.zeros((ec.batch,), jnp.int32)
         finished: list[Request] = []
         self._bw_log = []          # per-run series: init_state reset the
                                    # backend counters this snapshots
+        tracer.clear()             # one saved trace == one run
+        self._pending_obs = []
 
-        state, tokens = sched.refill(state, tokens, lanes, finished)
-        while any(l is not None for l in lanes):
-            logits, state = self._step(self.params, state, tokens)
-            tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-            self.steps += 1
-            if self._tiered and self.steps % ec.maintain_every == 0:
-                state = sched.maintain(state)
-                self._bw_log.append((state.caches.promo_pages,
-                                     state.caches.demo_pages))
-            nxt = np.asarray(tokens)
-            pos = np.asarray(state.pos)
-            now = time.time()
-            for i, r in enumerate(lanes):
-                # lanes mid-chunk-ingest are parked: no token this step
-                if r is None or not sched.is_decoding(i):
-                    continue
-                if not r.tokens:
-                    r.first_token_at = now
-                r.tokens.append(int(nxt[i]))
-                r.token_times.append(now)
-                if len(r.tokens) >= r.max_new or int(pos[i]) >= ec.max_len - 1:
-                    r.done = True
-                    # each request's completion stamps ITS OWN clock —
-                    # latency is measured from its own enqueue time, not
-                    # the batch wave's anchor
-                    r.done_at = now
-            if self.steps % 16 == 0:
-                log(f"[engine] step {self.steps}, queue={len(self.queue)}, "
-                    f"done={len(finished)}")
+        with profiler_trace(obs.profiler_dir if obs else None):
             state, tokens = sched.refill(state, tokens, lanes, finished)
+            while any(l is not None for l in lanes):
+                with tracer.span("decode_step", step=self.steps):
+                    logits, state = self._step(self.params, state, tokens)
+                    tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                self.steps += 1
+                if self._tiered and self.steps % ec.maintain_every == 0:
+                    with tracer.span("maintain", step=self.steps):
+                        state = sched.maintain(state)
+                    self._bw_log.append((state.caches.promo_pages,
+                                         state.caches.demo_pages))
+                if self.logits_log is not None:
+                    self.logits_log.append(np.asarray(logits))
+                nxt = np.asarray(tokens)
+                pos = np.asarray(state.pos)
+                now = time.time()
+                for i, r in enumerate(lanes):
+                    # lanes mid-chunk-ingest are parked: no token this step
+                    if r is None or not sched.is_decoding(i):
+                        continue
+                    if not r.tokens:
+                        r.first_token_at = now
+                    r.tokens.append(int(nxt[i]))
+                    r.token_times.append(now)
+                    self._tokens_out += 1
+                    if len(r.tokens) >= r.max_new \
+                            or int(pos[i]) >= ec.max_len - 1:
+                        r.done = True
+                        # each request's completion stamps ITS OWN clock —
+                        # latency is measured from its own enqueue time, not
+                        # the batch wave's anchor
+                        r.done_at = now
+                if self.hub is not None \
+                        and self.steps % obs.sample_every == 0:
+                    self._sample(state, lanes, len(finished))
+                if self.steps % 16 == 0:
+                    log(f"[engine] step {self.steps}, "
+                        f"queue={len(self.queue)}, done={len(finished)}")
+                state, tokens = sched.refill(state, tokens, lanes, finished)
         self.final_state = state            # introspection (tests, examples)
+        if self.hub is not None:
+            self._finalize_obs(state, lanes, finished)
         return finished
 
     # -- observability -----------------------------------------------------
+
+    def _sample(self, state, lanes, n_finished: int) -> None:
+        """One periodic sample point (every ``obs.sample_every`` steps).
+        Deliberately does NO device reads, compute or I/O: it stashes the
+        engine-loop books (host ints) plus references to the tiered
+        counter arrays (immutable, so the references ARE the snapshot).
+        ``_drain_samples`` replays the whole series into the hub at drain
+        with one batched tap call — in-loop cost is a few µs."""
+        self._pending_obs.append(dict(
+            step=self.steps, ts=time.time(), ts_us=self.tracer.now_us(),
+            queue=len(self.queue),
+            active=sum(1 for l in lanes if l is not None),
+            tokens=self._tokens_out, finished=n_finished,
+            releases=self.releases,
+            tap=obs_metrics.tap_stash(state.caches)
+            if self._tiered else None))
+
+    def _drain_samples(self) -> None:
+        """Replay the stashed sample points into the hub, in order: one
+        jitted vmapped tap over the stacked stashes + one transfer yields
+        every sample's tiered metrics at once, then each point becomes a
+        hub row (and a Perfetto counter-track event stamped at its
+        observed time)."""
+        hub, pend = self.hub, self._pending_obs
+        self._pending_obs = []
+        series: dict = {}
+        if pend and pend[0]["tap"] is not None:
+            series = jax.device_get(
+                self._batch_tap(tuple(p["tap"] for p in pend)))
+        for i, p in enumerate(pend):
+            hub.record({
+                "engine_steps_total": p["step"],
+                "engine_tokens_total": p["tokens"],
+                "engine_finished_requests_total": p["finished"],
+                "engine_releases_total": p["releases"],
+            })
+            hub.set("engine_queue_depth", p["queue"])
+            hub.set("engine_active_lanes", p["active"])
+            if series:
+                m = {k: float(v[i]) for k, v in series.items()}
+                hub.record(m)
+                hub.set("engine_translated_pages_per_step",
+                        m["trimma_translated_pages_total"]
+                        / max(p["step"], 1))
+                self.tracer.counter("trimma_pages", {
+                    "fast_resident": m["trimma_fast_resident_pages"],
+                    "metadata": m["trimma_metadata_pages"]},
+                    ts=p["ts_us"])
+            hub.sample(step=p["step"], ts=p["ts"])
+
+    def _finalize_obs(self, state, lanes, finished) -> None:
+        """Drain-time export: replay the sample series, request-latency
+        percentiles as labelled gauges, the token-latency histogram,
+        tenant fairness counters, then the Prometheus exposition +
+        Perfetto trace files."""
+        hub = self.hub
+        self._sample(state, lanes, len(finished))   # final sample point
+        self._drain_samples()
+        stats = self.request_stats(finished)
+        blocks = {"all": stats["aggregate"], **stats.get("tenants", {})}
+        for tenant, block in blocks.items():
+            for stat in ("latency_ms", "ttft_ms", "queue_wait_ms"):
+                for q, v in block.get(stat, {}).items():
+                    if q == "n":
+                        continue
+                    hub.set("engine_request_latency_ms", v,
+                            labels={"tenant": tenant, "stat": stat[:-3],
+                                    "quantile": q})
+        h = stats["aggregate"]["token_latency_hist"]
+        gaps = []
+        for r in finished:
+            ts = [r.admitted_at] + list(r.token_times)
+            gaps += [1e3 * (b - a) for a, b in zip(ts, ts[1:])]
+        hub.observe_hist("engine_token_latency_ms", h["edges_ms"],
+                         h["counts"], sum(gaps))
+        book = getattr(self.scheduler, "book", None)
+        if book is not None and hasattr(book, "metrics"):
+            for name, value, labels in book.metrics():
+                hub.set(name, value, labels=labels)
+        hub.finalize(step=self.steps)
+        if self.ec.obs.trace_path and self.tracer is not NULL_TRACER:
+            self.tracer.save(self.ec.obs.trace_path)
 
     @property
     def counters(self) -> dict:
@@ -447,11 +613,14 @@ class Engine:
 
         def _hist(gaps_ms):
             # log2 buckets from 0.25 ms: [.25, .5), [.5, 1), ... [>= 2^k]
-            edges = [0.25 * 2 ** i for i in range(12)]
-            counts = [0] * (len(edges) + 1)
+            # — the one histogram geometry the whole repo shares
+            # (obs.metrics.HIST_EDGES_MS; the hub exposes it as the
+            # engine_token_latency_ms Prometheus histogram)
+            counts = [0] * obs_metrics.HIST_BUCKETS
             for g in gaps_ms:
-                counts[int(np.searchsorted(edges, g, side="right"))] += 1
-            return dict(edges_ms=edges, counts=counts)
+                counts[obs_metrics.bucket_index(g)] += 1
+            return dict(edges_ms=list(obs_metrics.HIST_EDGES_MS),
+                        counts=counts)
 
         def _block(rs):
             gaps = []                       # one latency per decoded token

@@ -31,6 +31,7 @@ import jax.numpy as jnp
 
 from repro.kernels.paged_attention.ops import (paged_attention_op,
                                                paged_attention_split_op)
+from repro.obs import metrics as obs_metrics
 from repro.tiered import kvcache as tk
 
 
@@ -93,3 +94,12 @@ def release(cfg: tk.TieredConfig, st: tk.TieredState, seq) -> tk.TieredState:
     sequence's pages from every metadata structure in one batched pass
     (``tiered.kvcache.release_seq``)."""
     return tk.release_seq(cfg, st, seq)
+
+
+def metrics(cfg: tk.TieredConfig, st: tk.TieredState) -> dict:
+    """Canonical telemetry view of one store (DESIGN.md §10): the obs tap
+    over the in-graph counters under their registered ``trimma_*`` names,
+    bandwidth already scaled to bytes.  Works on a single store, a
+    layer-stacked one (``models.kv_backend.TieredBackend``) or any vmapped
+    state — counters sum over every leading axis."""
+    return obs_metrics.tiered_metrics(st, page_bytes=cfg.page_bytes)

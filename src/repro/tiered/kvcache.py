@@ -77,6 +77,21 @@ from repro.core.remap import rcache as rc_ops
 from repro.core.remap.irt import E, INVALID
 from repro.core.remap.rcache import RemapCacheGeometry
 from repro.kernels.remap_gather.ops import remap_gather_op
+from repro.obs.registry import MetricSpec, register
+
+# canonical metric names for the counters this store accumulates beyond
+# the iRC/iRT/migration families its building blocks declare
+# (DESIGN.md §10; obs.metrics.tiered_metrics is the tap)
+register(
+    MetricSpec("trimma_dev_table_hits_total", "counter",
+               "live lookup lanes served from the cached device page "
+               "table (zero iRC probes, zero iRT walks)"),
+    MetricSpec("trimma_fast_resident_pages", "gauge",
+               "pages currently resident in the fast pool"),
+    MetricSpec("trimma_metadata_pages", "gauge",
+               "allocated iRT leaf blocks (saved-space metadata "
+               "footprint, Figure 9 analogue)"),
+)
 
 
 @dataclasses.dataclass(frozen=True)

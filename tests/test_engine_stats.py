@@ -1,0 +1,141 @@
+"""Engine.request_stats and the migration-bandwidth counter series:
+histogram bucket edges, per-tenant blocks, zero-finished behaviour, and
+the delta semantics of ``epoch_promo_bytes``/``epoch_demo_bytes``
+(DESIGN.md §9/§10)."""
+
+import functools
+
+import jax
+import numpy as np
+import pytest
+
+from repro.obs import metrics as obs_metrics
+from repro.serve.engine import Engine, EngineConfig, Request
+
+
+@functools.lru_cache(maxsize=1)
+def _smoke_model():
+    from repro.configs import get_config, reduce_for_smoke
+    from repro.models import init_params
+    cfg = reduce_for_smoke(get_config("llama3-8b"))
+    return cfg, init_params(cfg, jax.random.key(0))
+
+
+def _engine(**kw):
+    cfg, params = _smoke_model()
+    return cfg, Engine(cfg, params, EngineConfig(batch=2, max_len=48, **kw))
+
+
+def _req(rid, tenant="default", admitted=0.0, gaps_s=()):
+    """A finished request whose token_times produce exactly ``gaps_s``."""
+    r = Request(rid=rid, prompt=np.zeros(2, np.int32),
+                max_new=max(len(gaps_s), 1), tenant_id=tenant)
+    r.arrived = admitted
+    r.admitted_at = admitted
+    t = admitted
+    for g in gaps_s:
+        t += g
+        r.tokens.append(1)
+        r.token_times.append(t)
+    r.first_token_at = r.token_times[0] if r.token_times else admitted
+    r.done_at = t
+    r.done = True
+    return r
+
+
+# ---------------------------------------------------------------------------
+# request_stats
+# ---------------------------------------------------------------------------
+
+def test_zero_finished_requests():
+    _, eng = _engine()
+    stats = eng.request_stats([])
+    agg = stats["aggregate"]
+    assert agg["latency_ms"] == {}          # no KeyError on 'p50'
+    assert agg["ttft_ms"] == {}
+    assert agg["tokens"] == 0
+    assert sum(agg["token_latency_hist"]["counts"]) == 0
+    assert "tenants" not in stats
+
+
+def test_hist_bucket_edges_and_placement():
+    _, eng = _engine()
+    # gaps (in s): 0.1ms -> bucket 0; 0.25ms -> bucket 1 (edge opens its
+    # bucket); 3ms -> [2,4) = bucket 4; 600ms -> +Inf bucket 12
+    r = _req(0, gaps_s=(0.1e-3, 0.25e-3, 3e-3, 600e-3))
+    h = eng.request_stats([r])["aggregate"]["token_latency_hist"]
+    assert h["edges_ms"] == list(obs_metrics.HIST_EDGES_MS)
+    assert len(h["counts"]) == obs_metrics.HIST_BUCKETS == 13
+    expect = [0] * 13
+    for b in (0, 1, 4, 12):
+        expect[b] += 1
+    assert h["counts"] == expect
+
+
+def test_latency_percentiles_and_tenant_blocks():
+    _, eng = _engine()
+    reqs = [_req(0, tenant="a", gaps_s=(10e-3,)),
+            _req(1, tenant="a", gaps_s=(30e-3,)),
+            _req(2, tenant="b", gaps_s=(50e-3,))]
+    stats = eng.request_stats(reqs)
+    agg = stats["aggregate"]["latency_ms"]
+    assert agg["n"] == 3
+    assert agg["p50"] == pytest.approx(30.0, rel=1e-6)
+    assert agg["max"] == pytest.approx(50.0, rel=1e-6)
+    # per-tenant blocks present iff more than one tenant
+    assert set(stats["tenants"]) == {"a", "b"}
+    assert stats["tenants"]["b"]["latency_ms"]["n"] == 1
+    assert stats["tenants"]["b"]["tokens"] == 1
+
+    single = eng.request_stats([_req(0, tenant="a", gaps_s=(1e-3,))])
+    assert "tenants" not in single
+
+
+# ---------------------------------------------------------------------------
+# epoch promo/demo byte series (Engine.counters delta semantics)
+# ---------------------------------------------------------------------------
+
+def _run_tiered(n_req=6, max_new=12, maintain_every=2):
+    cfg, params = _smoke_model()
+    eng = Engine(cfg, params, EngineConfig(
+        batch=2, max_len=64, backend="tiered", page_tokens=8,
+        fast_data_slots=4, maintain_every=maintain_every))
+    rng = np.random.default_rng(7)
+    for rid in range(n_req):
+        eng.submit(Request(rid=rid, prompt=rng.integers(0, cfg.vocab, 4),
+                           max_new=max_new))
+    done = eng.run()
+    assert len(done) == n_req
+    return eng
+
+
+def test_epoch_bandwidth_series_deltas():
+    eng = _run_tiered()
+    c = eng.counters
+    promo, demo = c["epoch_promo_bytes"], c["epoch_demo_bytes"]
+    # one entry per maintain pass, same series length for both
+    assert len(promo) == len(demo) == len(eng._bw_log) > 0
+    # the entries are per-epoch DELTAS of a monotonic counter: each is
+    # non-negative and the series telescopes back to the run total
+    assert all(p >= 0 for p in promo)
+    assert all(d >= 0 for d in demo)
+    assert sum(promo) == c["promo_bytes"]
+    assert sum(demo) == c["demo_bytes"]
+    page_bytes = eng.backend.tcfg.page_bytes
+    assert all(p % page_bytes == 0 for p in promo)
+
+
+def test_epoch_series_resets_per_run():
+    eng = _run_tiered()
+    first = eng.counters["epoch_promo_bytes"]
+    # reuse the engine: a second run must restart the series from zero
+    cfg, _ = _smoke_model()
+    rng = np.random.default_rng(8)
+    for rid in range(4):
+        eng.submit(Request(rid=rid, prompt=rng.integers(0, cfg.vocab, 4),
+                           max_new=8))
+    eng.run()
+    again = eng.counters
+    assert all(p >= 0 for p in again["epoch_promo_bytes"])
+    assert sum(again["epoch_promo_bytes"]) == again["promo_bytes"]
+    assert len(first) > 0
