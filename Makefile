@@ -24,7 +24,10 @@ bench-serve:
 	$(PY) -m benchmarks.run --serve
 	$(PY) -m benchmarks.check_bench BENCH_smoke.json serve_decode
 
-# full-model engine decode benchmark only (merges into BENCH_smoke.json)
+# full-model engine decode benchmark only (merges into BENCH_smoke.json);
+# the gate requires tiered tokens/s >= dense at k=1 (the fused hot path,
+# DESIGN.md §11), bit-identical logits, and fused per-token cost strictly
+# decreasing over the k in {1,2,4} multi-token sweep
 bench-engine:
 	$(PY) -m benchmarks.run --engine
 	$(PY) -m benchmarks.check_bench BENCH_smoke.json engine_decode

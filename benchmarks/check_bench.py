@@ -62,16 +62,38 @@ def _check_engine(ed) -> bool:
     ran_ok = dense["tokens_per_s"] > 0 and tiered["tokens_per_s"] > 0
     meta_ok = tiered.get("dev_hits", 0) > 0
     parity_ok = ed["logits_max_abs_diff"] == 0.0
+    # the fused-hot-path contract (DESIGN.md §11): the tiered backend's
+    # k=1 decode loop must not be slower than dense on the same machine
+    # in the same interleaved run
+    ratio = ed.get("tokens_ratio",
+                   tiered["tokens_per_s"] / dense["tokens_per_s"])
+    speed_ok = ratio >= 1.0
     print(f"engine_decode: dense {dense['tokens_per_s']:.0f} tok/s, "
           f"tiered {tiered['tokens_per_s']:.0f} tok/s "
           f"[{'OK' if ran_ok else 'REGRESSED'}]")
+    print(f"engine_decode: tiered/dense tokens ratio {ratio:.3f} "
+          f"[{'OK' if speed_ok else 'TIERED SLOWER THAN DENSE'}]")
     print(f"engine_decode: tiered dev_hits={tiered.get('dev_hits', 0)} "
           f"migrations={tiered.get('migrations', 0)} "
           f"[{'OK' if meta_ok else 'NO METADATA PATH'}]")
     print(f"engine_decode: logits max|diff| dense vs tiered = "
           f"{ed['logits_max_abs_diff']:.1e} "
           f"[{'OK' if parity_ok else 'NOT BIT-IDENTICAL'}]")
-    return ran_ok and meta_ok and parity_ok
+    # multi-token amortisation: per-token cost through the fused
+    # append+attend kernel must strictly fall as k grows 1 -> 2 -> 4
+    mt = ed.get("multi_token")
+    mt_ok = True
+    if mt is None:
+        mt_ok = False
+        print("engine_decode: no multi_token sweep in section [MISSING]")
+    else:
+        per_tok = [mt[f"k{k}"]["us_per_token"] for k in (1, 2, 4)]
+        mt_ok = per_tok[0] > per_tok[1] > per_tok[2]
+        print("engine_decode: fused us/token "
+              + " -> ".join(f"k{k}:{u:.1f}"
+                            for k, u in zip((1, 2, 4), per_tok))
+              + f" [{'OK' if mt_ok else 'NOT STRICTLY DECREASING'}]")
+    return ran_ok and speed_ok and meta_ok and parity_ok and mt_ok
 
 
 def _check_sched(sd) -> bool:

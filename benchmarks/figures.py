@@ -264,7 +264,7 @@ def fig13_config(quick=False):
 # core/policy presets — the policy-transparency claim, quantified
 # ---------------------------------------------------------------------------
 
-POLICY_SWEEP = ["threshold", "mea", "on_demand", "write_aware"]
+POLICY_SWEEP = ["threshold", "mea", "on_demand", "write_aware", "topk"]
 
 
 def fig_policy_sweep(quick=False, timing="hbm3+ddr5"):

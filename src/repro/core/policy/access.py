@@ -20,13 +20,16 @@ exact legacy op order (golden counters pin it).
 
 Epochs here are access-count based: every ``2^decay_shift`` accesses
 (``st["step"]`` is the simulator's access counter).  The ``topk`` decider
-has no per-access analogue (it needs an epoch-wide ranking) and degrades
-to the threshold gate; the epoch-ranked version runs in the serving
-scheduler (DESIGN.md §7).
+runs epoch-ranked, like the serving scheduler's (DESIGN.md §7): at each
+epoch edge the gate ranks every block's score and carries the k-th
+highest as the epoch's admission cut (``pol_cut``) plus a move budget of
+``pol.topk`` (``pol_budget``); during the epoch an access installs only
+while budget remains and its block's score clears the cut.
 """
 
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 from .config import PolicyConfig
@@ -77,6 +80,14 @@ def init(pol: PolicyConfig, mode: str, n: int) -> dict:
     for key in tracked_keys(pol, mode):
         fill = _STALE if key == "pol_last" else 0
         out[key] = jnp.full((n,), fill, jnp.int32)
+    if out and pol.decider == "topk":
+        # epoch-ranked carry: the admission cut and the per-epoch move
+        # budget.  Both refresh at every epoch edge; the first epoch
+        # starts with a full budget and a cut of 1 (no history yet — the
+        # first k touched blocks admit, exactly what ranking an all-zero
+        # score table would allow)
+        out["pol_cut"] = jnp.asarray(1, jnp.int32)
+        out["pol_budget"] = jnp.asarray(int(pol.topk), jnp.int32)
     return out
 
 
@@ -98,13 +109,31 @@ def gate(pol: PolicyConfig, mode: str, st: dict, b, is_write, eligible):
         sc = st["touch"][b] + (st["pol_ema"][b] >> 1)
     else:
         sc = st["touch"][b]
-    go = eligible & (sc >= thr)
+    tick = (st["step"] & ((1 << pol.decay_shift) - 1)) == 0
+    if pol.decider == "topk":
+        # epoch-ranked admission (the serving scheduler's topk, DESIGN.md
+        # §7, in per-access form): at the epoch edge rank EVERY block's
+        # score, carry the k-th highest as the epoch's cut and refill the
+        # budget; an access installs only while budget remains and its
+        # block clears the cut (and was touched at all)
+        if pol.tracker == "mea":
+            scores = st["touch"] + (st["pol_ema"] >> 1)
+        else:
+            scores = st["touch"]
+        k = min(int(pol.topk), scores.shape[0])
+        kth = jax.lax.top_k(scores, k)[0][-1]
+        st["pol_cut"] = jnp.where(tick, jnp.maximum(kth, 1), st["pol_cut"])
+        st["pol_budget"] = jnp.where(tick, pol.topk, st["pol_budget"])
+        go = eligible & (sc >= 1) & (sc >= st["pol_cut"]) \
+            & (st["pol_budget"] > 0)
+        st["pol_budget"] = st["pol_budget"] - go.astype(jnp.int32)
+    else:
+        go = eligible & (sc >= thr)
 
     st["touch"] = _mset(st["touch"], b, 0, go)
     if pol.tracker == "mea":
         st["pol_ema"] = _mset(st["pol_ema"], b, 0, go)
 
-    tick = (st["step"] & ((1 << pol.decay_shift) - 1)) == 0
     if pol.tracker == "mea":
         st["pol_ema"] = jnp.where(tick, st["touch"] + (st["pol_ema"] >> 1),
                                   st["pol_ema"])

@@ -131,9 +131,17 @@ def write_aware_policy(**kw) -> PolicyConfig:
 
 
 def topk_policy(**kw) -> PolicyConfig:
-    """Top-k-per-epoch promotion (epoch ranking instead of a threshold)."""
+    """Top-k-per-epoch promotion (epoch ranking instead of a threshold).
+
+    Ranked admission only moves at epoch edges, so its epochs must be
+    much shorter than a decay epoch or the budget never refreshes (a
+    trace shorter than ``2^decay_shift`` accesses would get exactly
+    ``topk`` installs, total) — MemPod-style intervals, not decay
+    windows.  Hence the short 256-access default here; the serving
+    scheduler paces by ``epoch_len`` and is unaffected."""
     kw.setdefault("promote_threshold", 1)
     kw.setdefault("install_threshold", 1)
+    kw.setdefault("decay_shift", 8)
     return PolicyConfig(name="topk", decider="topk", **kw).validate()
 
 

@@ -74,3 +74,65 @@ def paged_attention_split_ref(q, fast_k, fast_v, slow_k, slow_v,
                          seq_lens)
 
 
+def paged_attention_fused_ref(q, fast_k, fast_v, slow_k, slow_v,
+                              entries, k_new, v_new, pos):
+    """Fused k-token append+attend oracle.
+
+    q [B,K,KV,G,hd]; fast pools [fast_slots,KV,page,hd]; slow pools
+    [B*NP,KV,page,hd] (identity homes: lane b page j at row b*NP+j);
+    entries [B,npages] = each lane's leaf rows (>= 0 names the page's
+    fast slot, INVALID < 0 means the slow home is the only copy) —
+    the same forward map the TPU kernel's index maps route by; k_new /
+    v_new [B,K,KV,hd]; pos [B] = position of each lane's first new token
+    (< 0 parks the lane).
+
+    The oracle rebuilds each lane's logical page sequence with gathers
+    and selects only — never a scatter (XLA:CPU lowers scatter to a
+    serial element loop; gather+select stay vectorised and fuse into the
+    attend producers): the slow pool reshaped to [B,NP,...] *is* the
+    identity layout, fast-resident pages route through ``entries``
+    (write-through keeps both tiers' bytes identical, so routing choice
+    can never change the math — only where the bytes stream from), and
+    the k new rows overlay by position select last — attending token i
+    over positions < pos+1+i is then bitwise equal to i single-token
+    append->attend steps.  Values at masked positions never reach the
+    softmax (the seq_lens mask hits first and pools never hold
+    non-finite bytes), so stale bytes under the overlay are harmless.
+
+    ``entries`` may be sliced to the live-page bucket (DESIGN.md §11):
+    attend only the first ``entries.shape[1]`` logical pages of every
+    lane.  The caller guarantees ``n_pages * page > max(pos) + K - 1``
+    (every live and newly appended position fits).  Truncation is
+    bitwise-invisible: the dropped tail is fully masked, and a
+    fully-masked row contributes exactly 0.0 to the softmax normaliser
+    and the value contraction, so the attended output is bit-identical
+    to the full-width read at a fraction of the cost."""
+    B, K = q.shape[0], q.shape[1]
+    NP = slow_k.shape[0] // B
+    page = slow_k.shape[2]
+    npb = min(entries.shape[1], NP)
+    en = entries[:, :npb]
+    is_fast = en >= 0
+    fidx = jnp.where(is_fast, en, 0).reshape(-1)
+    sel = is_fast[:, :, None, None, None]
+    T = npb * page
+    tpos = jnp.arange(T)
+    live = pos >= 0
+
+    def build(slow, fast, new):
+        base = slow.reshape(B, NP, *slow.shape[1:])[:, :npb]
+        fpages = jnp.take(fast, fidx, axis=0).reshape(base.shape)
+        x = _flatten_pages(jnp.where(sel, fpages, base))
+        for i in range(K):
+            m = live[:, None] & (tpos[None, :] == (pos + i)[:, None])
+            x = jnp.where(m[:, None, :, None],
+                          new[:, i, :, None, :].astype(x.dtype), x)
+        return x
+
+    kk = build(slow_k, fast_k, k_new)
+    vv = build(slow_v, fast_v, v_new)
+    outs = [_attend_pages(q[:, i], kk, vv, jnp.where(pos >= 0, pos + 1 + i, 0))
+            for i in range(K)]
+    return jnp.stack(outs, axis=1)
+
+

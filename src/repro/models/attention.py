@@ -234,3 +234,27 @@ def block_decode_attention(p, x, cfg: ArchConfig, cache, pos, backend,
     y = jnp.einsum("bshk,hkd->bsd", out.reshape(B, 1, H, hd),
                    p["wo"].astype(x.dtype))
     return y, cache
+
+
+def block_decode_attention_fused(p, x, cfg: ArchConfig, cache, pos, backend,
+                                 *, aux):
+    """Fused-path variant of ``block_decode_attention`` for backends with
+    a ``begin_step``/``append_attend``/``end_step`` step protocol
+    (``models.kv_backend.TieredBackend``): the backend attends the new
+    token against its store *and* the new K/V row in one fused read — no
+    append write lands on the attention's critical path.  The cache slice
+    is read-only here; the new rows return as ``knv`` for the backend's
+    batched ``end_step`` persist, and all metadata moved in
+    ``begin_step``.  ``aux`` is the backend's per-step routing bundle.
+
+    Returns (y [B,1,d], (k_new, v_new) [B,KV,hd] each).
+    """
+    positions = pos[:, None]                                   # [B, 1]
+    q, k, v = _qkv(p, x, cfg, positions)
+    B, _, H, hd = q.shape
+    KV = k.shape[2]
+    out = backend.append_attend(cache, q.reshape(B, KV, H // KV, hd),
+                                k[:, 0], v[:, 0], pos, aux)
+    y = jnp.einsum("bshk,hkd->bsd", out.reshape(B, 1, H, hd),
+                   p["wo"].astype(x.dtype))
+    return y, (k[:, 0], v[:, 0])

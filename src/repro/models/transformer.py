@@ -430,6 +430,23 @@ def _block_decode(cfg: ArchConfig, p, x, cache, pos, flag, backend):
     return x + y, new_cache
 
 
+def _block_decode_fused(cfg: ArchConfig, p, x, cache, pos, backend, aux):
+    """``_block_decode`` on the fused decode path (plain-KV families
+    only): attention goes through the backend's fused append+attend read,
+    the new K/V rows ride out as scan ys for the batched end-of-step
+    persist, and the cache slice itself is read-only."""
+    h = rms_norm(x, p["norm1"], cfg.rms_eps)
+    a, knv = attn.block_decode_attention_fused(p["attn"], h, cfg, cache,
+                                               pos, backend, aux=aux)
+    x = x + a
+    h2 = rms_norm(x, p["norm2"], cfg.rms_eps)
+    if cfg.family == "moe":
+        y, _ = moe_mod.moe_ffn(p["moe"], h2, cfg)
+    else:
+        y = swiglu(h2, p["mlp"]["w_gate"], p["mlp"]["w_up"], p["mlp"]["w_down"])
+    return x + y, knv
+
+
 def _mlstm_step_tuple(p, x, cache):
     out, st = xlstm_mod.mlstm_step(p, x, {"C": cache["mC"], "n": cache["mn"],
                                           "m": cache["mm"]})
@@ -437,13 +454,19 @@ def _mlstm_step_tuple(p, x, cache):
 
 
 def decode_step(cfg: ArchConfig, params, state: DecodeState, tokens,
-                backend=None):
+                backend=None, *, n_pages: int | None = None):
     """tokens [B] int32 -> (logits [B, vocab], new state).
 
     ``backend`` selects the KV storage (``models.kv_backend``): None /
     ``DenseBackend`` keeps today's contiguous caches; ``TieredBackend``
     decodes every attention layer through its own Trimma-managed
-    two-tier store — same logits, bit for bit."""
+    two-tier store — same logits, bit for bit.
+
+    ``n_pages`` (static, fused tiered path only) is the live-page
+    attention bucket (DESIGN.md §11): each layer's fused read covers only
+    that page prefix instead of ``max_len``; the caller must guarantee it
+    holds every live position plus this step's append.  Bit-identical to
+    the full-width read — the truncated tail is fully masked."""
     if backend is None:
         from .kv_backend import DenseBackend
         backend = DenseBackend(cfg)
@@ -454,6 +477,28 @@ def decode_step(cfg: ArchConfig, params, state: DecodeState, tokens,
 
     if cfg.family == "vlm":
         x, caches = _vlm_decode(cfg, params, x, state, backend)
+    elif cfg.family in ("dense", "moe") and hasattr(backend, "begin_step"):
+        # fused decode path: the backend hoists all per-step metadata work
+        # into ONE stacked begin_step, every layer's attention is a single
+        # fused append+attend kernel (no append write on the critical
+        # path), and the new K/V rows persist in one batched end_step
+        caches, aux = backend.begin_step(state.caches, pos,
+                                         n_pages=n_pages)
+
+        def body(x, layer):
+            p, flag, cache = layer
+            x, knv = _block_decode_fused(cfg, p, x, cache, pos, backend,
+                                         aux)
+            return x, knv
+
+        # the scan slices only the pool arrays per layer (scan_operands):
+        # routing/translation ride in aux and metadata stays outside, so
+        # the body never pays per-layer slices of fields it doesn't read
+        x, knv = jax.lax.scan(body, x,
+                              (params["blocks"], flags,
+                               backend.scan_operands(caches)),
+                              unroll=_scan_unroll())
+        caches = backend.end_step(caches, knv, pos, aux)
     else:
         def body(x, layer):
             p, flag, cache = layer
@@ -508,7 +553,8 @@ def _vlm_decode(cfg, params, x, state: DecodeState, backend):
 _CHUNK_FAMILIES = ("dense", "moe")
 
 
-def forward_chunk(cfg: ArchConfig, params, tokens, buf_k, buf_v, start):
+def forward_chunk(cfg: ArchConfig, params, tokens, buf_k, buf_v, start,
+                  *, return_logits: bool = False):
     """One chunked-prefill step: compute K/V (and hidden math) for prompt
     tokens ``[start, start + C)`` attending to the previous chunks' K/V.
 
@@ -519,7 +565,13 @@ def forward_chunk(cfg: ArchConfig, params, tokens, buf_k, buf_v, start):
                   length the one-shot ``forward`` would run at.
     start         traced int32, page/chunk aligned by the caller.
 
-    Returns the updated (buf_k, buf_v) with rows [start, start+C) written.
+    Returns the updated (buf_k, buf_v) with rows [start, start+C) written;
+    with ``return_logits=True``, (buf_k, buf_v, logits [B, C, vocab]) —
+    the chunk rows' output logits, each bit-identical to the same row of
+    the one-shot ``forward`` (the hidden states are, by the same
+    induction as the K/V rows below), so the scheduler can emit an
+    admitted prompt's first token straight off its final chunk with no
+    extra decode step.
 
     Bit-identicality contract (tests/test_sched.py pins it): because each
     chunk's queries score against a key axis of the SAME length ``P`` the
@@ -583,10 +635,14 @@ def forward_chunk(cfg: ArchConfig, params, tokens, buf_k, buf_v, start):
                        p["mlp"]["w_down"])
         return x + y, (pk, pv)
 
-    _, (nk, nv) = jax.lax.scan(body, x, (params["blocks"], flags,
+    x, (nk, nv) = jax.lax.scan(body, x, (params["blocks"], flags,
                                          buf_k, buf_v),
                                unroll=_scan_unroll())
-    return nk, nv
+    if not return_logits:
+        return nk, nv
+    x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    return nk, nv, unembed(x, table)
 
 
 def init_chunk_buffers(cfg: ArchConfig, P: int, batch: int = 1):

@@ -65,15 +65,18 @@ def make_decode_fn(cfg: ArchConfig):
 
 
 def make_tiered_decode_step(tcfg, *, path: str = "zero_copy",
-                            impl: str = "auto"):
+                            impl: str = "auto",
+                            n_pages: int | None = None):
     """Build one jitted serving decode step against the tiered KV store:
     append this step's per-sequence K/V token, then read attention through
     the Trimma-translated device table.
 
-    ``path`` selects the data path (both produce bit-identical output —
+    ``path`` selects the data path (all produce bit-identical output —
     the golden-equality test pins it):
       "zero_copy"  cached device table + split-pool kernel — pool bytes
                    never move (the production path);
+      "fused"      one fused append+attend kernel over k tokens per lane
+                   per call (``serve.tiered.attend_tokens``; set ``k``);
       "concat"     the legacy baseline: full re-translation + unified-pool
                    concatenation per step (kept for the ``serve_decode``
                    benchmark; pair with ``cache_device_table=False``).
@@ -82,7 +85,13 @@ def make_tiered_decode_step(tcfg, *, path: str = "zero_copy",
     with q [B, KV, G, hd], k_new/v_new [B, KV, hd] and ``pos`` the decode
     position — a shared scalar or a per-lane [B] vector (ragged lanes
     decode at independent positions; seq_lens becomes pos + 1, clamped at
-    0 so a negative/idle lane reads nothing).
+    0 so a negative/idle lane reads nothing).  With ``path="fused"`` and
+    k > 1 the token axis rides second: q [B, k, KV, G, hd], k_new/v_new
+    [B, k, KV, hd], lane b's token i landing at position ``pos[b] + i``.
+
+    ``n_pages`` (fused path only) is the static live-page attention
+    bucket (DESIGN.md §11; ``serve.tiered.attend_tokens``) — the caller
+    guarantees every live and appended position fits inside it.
     """
     import jax.numpy as jnp
 
@@ -90,6 +99,22 @@ def make_tiered_decode_step(tcfg, *, path: str = "zero_copy",
     from repro.tiered import kvcache as tk
 
     seq_ids = jnp.arange(tcfg.n_seqs, dtype=jnp.int32)
+
+    if path == "fused":
+        def step(st, q, k_new, v_new, pos):
+            pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32),
+                                   (tcfg.n_seqs,))
+            if q.ndim == 4:            # k = 1 with the flat signature
+                q, k_new, v_new = (q[:, None], k_new[:, None],
+                                   v_new[:, None])
+            return srv.attend_tokens(tcfg, st, q, k_new, v_new, pos,
+                                     n_pages=n_pages, impl=impl)
+        return jax.jit(step)
+    if n_pages is not None:
+        raise ValueError(
+            f"n_pages (live-page bucket) only applies to path='fused'; "
+            f"got path={path!r}")
+
     fn = srv.attend if path == "zero_copy" else srv.attend_concat
 
     def step(st, q, k_new, v_new, pos):
@@ -102,7 +127,7 @@ def make_tiered_decode_step(tcfg, *, path: str = "zero_copy",
     return jax.jit(step)
 
 
-def make_chunk_prefill_fn(cfg: ArchConfig):
+def make_chunk_prefill_fn(cfg: ArchConfig, *, logits: bool = False):
     """Build one jitted chunked-prefill step (DESIGN.md §9): one prompt
     chunk's K/V computed against the accumulated per-layer key buffers.
 
@@ -114,12 +139,17 @@ def make_chunk_prefill_fn(cfg: ArchConfig):
     ingested K/V and all downstream decode logits) bit-identical to the
     one-shot ``forward(collect_cache=True)`` pass.  One jit key covers
     every (P, C) pair the caller uses it at (shapes re-trace as usual).
+
+    ``logits=True`` appends the chunk's LM-head logits [B, C, vocab] to
+    the return — the final chunk's last prompt row is exactly the first
+    decode step's distribution, so the scheduler can emit an admitted
+    prompt's first token straight from ingest.
     """
     from repro.models import forward_chunk
 
     def step(params, chunk_tokens, buf_k, buf_v, start):
         return forward_chunk(cfg, params, chunk_tokens, buf_k, buf_v,
-                             start)
+                             start, return_logits=logits)
 
     return jax.jit(step)
 

@@ -66,6 +66,9 @@ register(
                "requests fully decoded"),
     MetricSpec("engine_releases_total", "counter",
                "lane metadata recycles (tiered release passes)"),
+    MetricSpec("engine_maintain_overlap", "counter",
+               "maintenance applies overlapped with the next decode step "
+               "(double-buffered plan/apply split, DESIGN.md §11)"),
     MetricSpec("engine_queue_depth", "gauge",
                "requests waiting in the scheduler queue"),
     MetricSpec("engine_active_lanes", "gauge",
@@ -125,6 +128,16 @@ class EngineConfig:
     fast_data_slots: int = 16
     policy: str | None = None     # core/policy preset name
     maintain_every: int = 4       # migration-scheduler cadence (steps)
+    overlap_maintain: bool = True  # double-buffer the maintenance pass:
+                                  # plan at the hook, apply the pool moves
+                                  # against the NEXT decode step (multi-
+                                  # tenant maintenance stays synchronous)
+    page_bucket: bool = True      # tiered fused path: attend only the
+                                  # power-of-two live-page prefix covering
+                                  # every lane's position (DESIGN.md §11)
+                                  # instead of the full provisioned
+                                  # max_len — bit-identical logits, cost
+                                  # scales with live context
     # request scheduling (serve/sched, DESIGN.md §9)
     scheduler: str = "greedy"     # "greedy" (PR 4 bit-for-bit) | "chunked"
                                   # ("wave" = deprecated greedy alias)
@@ -247,11 +260,25 @@ class Engine:
             self.backend = make_backend(cfg, ec.backend, ec.batch,
                                         ec.max_len, **kw)
         self._tiered = isinstance(self.backend, TieredBackend)
-        self._step = jax.jit(
-            lambda p, s, t: decode_step(cfg, p, s, t, backend=self.backend))
+        # decode-step jits, keyed by the live-page attention bucket
+        # (None = full provisioned width; dense always uses None)
+        self._step_fns: dict[int | None, Callable] = {}
+        # steady-state serving donates the KV state into the step: the
+        # loop threads it linearly, so the pre-step buffers are dead the
+        # moment the step returns and XLA updates pools in place instead
+        # of copying the whole store every token.  Observability opts
+        # out — its samples stash references into the state across steps
+        # (the batched drain tap would read donated buffers)
+        self._donate = ec.obs is None
         if self._tiered:
             self._maintain = jax.jit(self.backend.maintain)
             self._release = jax.jit(self.backend.release)
+            self._plan_fn = jax.jit(
+                lambda s: self.backend.plan_maintain(s))
+            self._apply_fn = jax.jit(
+                lambda s, p: self.backend.apply_maintain(s, p))
+        self._pending_plan = None      # double-buffered maintain (§11)
+        self.maintain_overlaps = 0
         self._prefill_fns: dict[int, Callable] = {}
         self._chunk_fns: dict[tuple, Callable] = {}
         self._write_chunk_fns: dict[int, Callable] = {}
@@ -311,10 +338,68 @@ class Engine:
 
     # -- scheduler-facing jitted primitives -------------------------------
 
+    def _step_fn(self, n_pages: int | None) -> Callable:
+        """The jitted full-model decode step, keyed by the live-page
+        attention bucket (one retrace per power-of-two bucket — at most
+        log2(max_pages_per_seq) keys over a run)."""
+        if n_pages not in self._step_fns:
+            cfg = self.cfg
+            self._step_fns[n_pages] = jax.jit(
+                lambda p, s, t, np_=n_pages: decode_step(
+                    cfg, p, s, t, backend=self.backend, n_pages=np_),
+                donate_argnums=(1,) if self._donate else ())
+        return self._step_fns[n_pages]
+
+    def _live_bucket(self, state) -> int | None:
+        """Pick the live-page attention bucket for the next decode step
+        (DESIGN.md §11): the smallest power-of-two page prefix covering
+        every lane's append position.  A lane at pos p appends at index p
+        and attends positions [0, p], so ``p // page_tokens + 1`` pages
+        suffice; the power-of-two rounding keeps the jit key count at
+        log2.  None (full provisioned width) when bucketing is off, the
+        backend is dense, every lane is parked, or the bucket already
+        spans the whole table.  ``state.pos`` here is the PREVIOUS step's
+        output, already materialised by the harvest loop's host read, so
+        this costs one tiny transfer, not a pipeline stall."""
+        if not (self._tiered and self.ec.page_bucket):
+            return None
+        mx = int(np.asarray(state.pos).max())
+        if mx < 0:
+            return None
+        tcfg = self.backend.tcfg
+        need = mx // tcfg.page_tokens + 1
+        bucket = 1 << (need - 1).bit_length()
+        return None if bucket >= tcfg.max_pages_per_seq else bucket
+
+    def _flush_maintain(self, state, *, overlapped: bool = False):
+        """Apply a deferred maintenance plan, if one is pending.  The
+        double-buffered pass plans at the hook and applies here — at the
+        top of the next loop iteration (the overlapped case: the apply
+        dispatches back-to-back with the next decode step) or, crucially,
+        in ``release_lane`` BEFORE any release: every plan lands before
+        the next metadata mutation, so the event sequence — and therefore
+        every counter — is identical to the synchronous pass."""
+        if self._pending_plan is None:
+            return state
+        with self.tracer.span("maintain_apply", step=self.steps):
+            state = self._apply_fn(state, self._pending_plan)
+        self._pending_plan = None
+        if overlapped:
+            self.maintain_overlaps += 1
+        # materialise the snapshot NOW: the donated next step reuses the
+        # state's buffers, so a live reference would read freed memory
+        self._bw_log.append((np.asarray(state.caches.promo_pages),
+                             np.asarray(state.caches.demo_pages)))
+        return state
+
     def release_lane(self, state, lane: int):
         """Recycle one lane's metadata (tiered: batched release across
-        layers; dense: no-op — the position mask hides stale rows)."""
+        layers; dense: no-op — the position mask hides stale rows).  A
+        pending maintenance plan flushes first: its moves were planned
+        against pre-release residency, so applying after the release
+        would resurrect the dead lane's pages."""
         if self._tiered:
+            state = self._flush_maintain(state)
             with self.tracer.span("release", lane=lane):
                 state = self._release(state, jnp.int32(lane))
             self.releases += 1
@@ -333,16 +418,24 @@ class Engine:
         from repro.models import init_chunk_buffers
         return init_chunk_buffers(self.cfg, P)
 
-    def chunk_fwd(self, P: int, C: int) -> Callable:
+    def chunk_fwd(self, P: int, C: int, *, logits: bool = False) -> Callable:
         """Jitted chunked-prefill forward (``serve.decode
         .make_chunk_prefill_fn``; one compiled fn, re-traced per (padded
         length, chunk size)): (params, chunk_tokens [1, C], buf_k, buf_v,
         start) -> updated buffers with rows [start, start+C) written —
-        bit-identical to the matching rows of the one-shot forward."""
-        if "fn" not in self._chunk_fns:
+        bit-identical to the matching rows of the one-shot forward.
+
+        ``logits=True`` (a separate jit key — the plain variant's key must
+        stay byte-for-byte what it always compiled) additionally returns
+        the chunk's LM-head logits [1, C, vocab]: the chunked scheduler
+        reads the prompt's last row off the final chunk so an admitted
+        request's first token costs no extra decode step."""
+        key = ("fn", logits)
+        if key not in self._chunk_fns:
             from repro.serve.decode import make_chunk_prefill_fn
-            self._chunk_fns["fn"] = make_chunk_prefill_fn(self.cfg)
-        return self._chunk_fns["fn"]
+            self._chunk_fns[key] = make_chunk_prefill_fn(self.cfg,
+                                                         logits=logits)
+        return self._chunk_fns[key]
 
     def write_chunk(self, C: int) -> Callable:
         """Jitted chunk ingest, keyed per chunk size: slices rows
@@ -387,6 +480,25 @@ class Engine:
         self._maintain_tenants = jax.jit(
             lambda s, lt: self.backend.maintain_tenants(s, lt, pols,
                                                         quotas))
+
+    def note_prefill_token(self, req: Request, tok: int, pos: int):
+        """Credit a token decoded from prefill logits (the chunked
+        scheduler's free first token: the final chunk's last prompt row
+        argmaxes to exactly what the first decode step would emit, so it
+        lands without one).  Books it like a harvested token; ``pos`` is
+        the lane position after the token (the prompt length) — the same
+        completion rules as the harvest loop apply, so a ``max_new`` of 1
+        or a capacity-filling prompt finishes the request outright."""
+        now = time.time()
+        if not req.tokens:
+            req.first_token_at = now
+        req.tokens.append(int(tok))
+        req.token_times.append(now)
+        self._tokens_out += 1
+        if len(req.tokens) >= req.max_new \
+                or int(pos) >= self.ec.max_len - 1:
+            req.done = True
+            req.done_at = now
 
     # -- prefill ---------------------------------------------------------
 
@@ -442,29 +554,51 @@ class Engine:
         finished: list[Request] = []
         self._bw_log = []          # per-run series: init_state reset the
                                    # backend counters this snapshots
+        self._pending_plan = None  # never carry a plan across runs
         tracer.clear()             # one saved trace == one run
         self._pending_obs = []
 
         with profiler_trace(obs.profiler_dir if obs else None):
             state, tokens = sched.refill(state, tokens, lanes, finished)
             while any(l is not None for l in lanes):
+                # a plan deferred at the last hook applies now, its
+                # dispatch overlapping this step's host-side work
+                state = self._flush_maintain(state, overlapped=True)
+                step_fn = self._step_fn(self._live_bucket(state))
                 with tracer.span("decode_step", step=self.steps):
-                    logits, state = self._step(self.params, state, tokens)
+                    logits, state = step_fn(self.params, state, tokens)
                     tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
                 self.steps += 1
                 if self._tiered and self.steps % ec.maintain_every == 0:
-                    with tracer.span("maintain", step=self.steps):
-                        state = sched.maintain(state)
-                    self._bw_log.append((state.caches.promo_pages,
-                                         state.caches.demo_pages))
+                    if ec.overlap_maintain \
+                            and not hasattr(self, "_maintain_tenants"):
+                        # double-buffered: plan now (scores + top-k only),
+                        # defer the pool moves to the next decode step.
+                        # The span keeps the canonical "maintain" name —
+                        # the §10 trace contract — with the apply half
+                        # showing up as "maintain_apply" under the next
+                        # decode step
+                        with tracer.span("maintain", step=self.steps,
+                                         phase="plan"):
+                            self._pending_plan = self._plan_fn(state)
+                    else:
+                        # synchronous (multi-tenant maintenance always is:
+                        # the tenant map can go stale across a deferral)
+                        with tracer.span("maintain", step=self.steps):
+                            state = sched.maintain(state)
+                        self._bw_log.append(
+                            (np.asarray(state.caches.promo_pages),
+                             np.asarray(state.caches.demo_pages)))
                 if self.logits_log is not None:
                     self.logits_log.append(np.asarray(logits))
                 nxt = np.asarray(tokens)
                 pos = np.asarray(state.pos)
                 now = time.time()
                 for i, r in enumerate(lanes):
-                    # lanes mid-chunk-ingest are parked: no token this step
-                    if r is None or not sched.is_decoding(i):
+                    # lanes mid-chunk-ingest are parked: no token this
+                    # step; a request finished by its prefill token
+                    # (max_new == 1) must not harvest a stray extra one
+                    if r is None or r.done or not sched.is_decoding(i):
                         continue
                     if not r.tokens:
                         r.first_token_at = now
@@ -485,6 +619,7 @@ class Engine:
                     log(f"[engine] step {self.steps}, "
                         f"queue={len(self.queue)}, done={len(finished)}")
                 state, tokens = sched.refill(state, tokens, lanes, finished)
+            state = self._flush_maintain(state)   # a last hook may be open
         self.final_state = state            # introspection (tests, examples)
         if self.hub is not None:
             self._finalize_obs(state, lanes, finished)
@@ -504,7 +639,7 @@ class Engine:
             queue=len(self.queue),
             active=sum(1 for l in lanes if l is not None),
             tokens=self._tokens_out, finished=n_finished,
-            releases=self.releases,
+            releases=self.releases, overlaps=self.maintain_overlaps,
             tap=obs_metrics.tap_stash(state.caches)
             if self._tiered else None))
 
@@ -526,6 +661,7 @@ class Engine:
                 "engine_tokens_total": p["tokens"],
                 "engine_finished_requests_total": p["finished"],
                 "engine_releases_total": p["releases"],
+                "engine_maintain_overlap": p["overlaps"],
             })
             hub.set("engine_queue_depth", p["queue"])
             hub.set("engine_active_lanes", p["active"])

@@ -41,8 +41,10 @@ from .qos import TenantBook, resolve_tenants, split_slots
 class _Ingest:
     """One lane's in-flight chunked prompt ingest."""
     req: object
-    ctx: np.ndarray            # [P] int32 padded context (prompt[:-1])
-    length: int                # real context tokens
+    ctx: np.ndarray            # [P] int32 padded FULL prompt (the last
+                               # token ingests too: the final chunk's
+                               # logits emit the first generated token)
+    length: int                # real prompt tokens
     P: int                     # padded (power-of-two) buffer length
     start: int = 0             # next chunk's first position
     buf_k: object = None       # [L, 1, P, KV, hd] chunk K/V buffers
@@ -162,8 +164,11 @@ class ChunkedScheduler:
                 f"prompt ({prompt.size}) exceeds max_len ({ec.max_len})")
         from repro.models.attention import CHUNKED_THRESHOLD
         from repro.serve.engine import padded_len
-        P = padded_len(int(ctx.size), ec.max_len)
-        admit = self._admit_fast_pages(lane, t, int(ctx.size))
+        # the FULL prompt ingests (last token included): the final
+        # chunk's logits hand back the first generated token, so an
+        # admitted request never pays a decode step for it
+        P = padded_len(int(prompt.size), ec.max_len)
+        admit = self._admit_fast_pages(lane, t, int(prompt.size))
         if self.chunk <= 0 or ctx.size == 0 or P > CHUNKED_THRESHOLD:
             # one-shot fallback: chunking off, trivial prompt, or padded
             # length beyond sdpa_auto's CHUNKED_THRESHOLD (above it the
@@ -177,23 +182,26 @@ class ChunkedScheduler:
                 self._note_admit(lane, t, admit)
             return state, tokens
         padded = np.zeros((P,), np.int32)
-        padded[:ctx.size] = ctx
+        padded[:prompt.size] = prompt
         bk, bv = eng.chunk_buffers(P)
         self.ingests[lane] = _Ingest(req=req, ctx=padded,
-                                     length=int(ctx.size), P=P,
+                                     length=int(prompt.size), P=P,
                                      buf_k=bk, buf_v=bv)
         if admit:
             # direct-to-fast BEFORE the chunk writes: prefill_chunk
             # routes resident pages to their fast copies (write-through
             # at ingest, DESIGN.md §9)
-            state = eng.admit_fast(state, lane, int(ctx.size), admit)
+            state = eng.admit_fast(state, lane, int(prompt.size), admit)
             self._note_admit(lane, t, admit)
         return state, tokens
 
     def _advance(self, state, tokens, lane: int):
         """Run one chunk of ``lane``'s ingest: chunk forward against the
         accumulated buffers, write the chunk through the backend, and on
-        the final chunk un-park the lane for decode."""
+        the final chunk un-park the lane for decode — emitting the
+        request's FIRST token straight off the chunk's logits (its last
+        real row is exactly the first decode step's distribution)."""
+        import jax.numpy as jnp
         eng = self.eng
         ing = self.ingests[lane]
         C = min(self.chunk, ing.P)
@@ -202,17 +210,24 @@ class ChunkedScheduler:
         # (same inputs, same reductions), so the chunk SIZE stays one jit
         # key and no dynamic_slice start ever clamps
         start = min(ing.start, ing.P - C)
+        final = start + C >= ing.length
         chunk = ing.ctx[start:start + C]
-        ing.buf_k, ing.buf_v = eng.chunk_fwd(ing.P, C)(
-            eng.params, chunk[None], ing.buf_k, ing.buf_v, start)
+        if final:
+            ing.buf_k, ing.buf_v, lg = eng.chunk_fwd(ing.P, C, logits=True)(
+                eng.params, chunk[None], ing.buf_k, ing.buf_v, start)
+        else:
+            ing.buf_k, ing.buf_v = eng.chunk_fwd(ing.P, C)(
+                eng.params, chunk[None], ing.buf_k, ing.buf_v, start)
         state = eng.write_chunk(C)(state, lane, ing.buf_k, ing.buf_v,
                                    start, ing.length)
         ing.start = start + C
         self.book.stats[self.book.tenant_of(ing.req)]["chunks"] += 1
-        if ing.start >= ing.length:            # last chunk landed
+        if final:                              # last chunk landed
             del self.ingests[lane]
             state = eng.set_pos(state, lane, ing.length)
-            tokens = tokens.at[lane].set(int(ing.req.prompt[-1]))
+            tok1 = int(jnp.argmax(lg[0, ing.length - 1 - start]))
+            tokens = tokens.at[lane].set(tok1)
+            eng.note_prefill_token(ing.req, tok1, ing.length)
         return state, tokens
 
     # -- the per-step pass ------------------------------------------------

@@ -29,7 +29,8 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.kernels.paged_attention.ops import (paged_attention_op,
+from repro.kernels.paged_attention.ops import (paged_attention_fused_op,
+                                               paged_attention_op,
                                                paged_attention_split_op)
 from repro.obs import metrics as obs_metrics
 from repro.tiered import kvcache as tk
@@ -60,6 +61,48 @@ def attend(cfg: tk.TieredConfig, st: tk.TieredState, q, seq_lens,
     out = paged_attention_split_op(q, st.fast_k, st.fast_v,
                                    st.slow_k, st.slow_v, table, seq_lens,
                                    impl=impl)
+    return out, st
+
+
+def attend_tokens(cfg: tk.TieredConfig, st: tk.TieredState, q, k_new,
+                  v_new, pos, *, n_pages: int | None = None,
+                  impl: str = "auto"):
+    """Fused k-token decode read+write: q [B, K, KV, G, hd] are K new
+    queries per lane, k_new/v_new [B, K, KV, hd] their KV rows, pos [B]
+    the first new token's position (< 0 parks the lane).  Returns
+    (out [B, K, KV, G, hd], new state).
+
+    One fused kernel overlays the new rows onto their routed tier and
+    attends all K tokens per-token-causally in the same pass — bitwise
+    equal to K sequential ``append_token`` -> ``attend`` steps — then the
+    rows persist via one batched routed scatter (``tk.append_tokens``)
+    off the attention's critical path.  No page table is materialised
+    (the leaf entries *are* the translation), so the device-table and
+    tracker accounting amortises to one record per call: each live page
+    gets one touch and counts one cold translation (first read) or one
+    ``dev_hits`` (``tk.record_reads``, lookup()'s cold/steady split).
+
+    ``n_pages`` (static) is the live-page attention bucket (DESIGN.md
+    §11): the kernel reads only that page prefix instead of the full
+    table.  The caller guarantees ``n_pages * page_tokens > max(pos) +
+    K - 1``; the truncated tail is fully masked, so the output is
+    bit-identical to the full-width read."""
+    B, K = q.shape[0], q.shape[1]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+    entries = st.leaf_table[:cfg.n_logical].reshape(cfg.n_seqs,
+                                                    cfg.max_pages_per_seq)
+    if n_pages is not None and n_pages < cfg.max_pages_per_seq:
+        entries = entries[:, :n_pages]
+    out = paged_attention_fused_op(q, st.fast_k, st.fast_v,
+                                   st.slow_k, st.slow_v, entries,
+                                   k_new, v_new, pos, impl=impl)
+    st = tk.append_tokens(cfg, st, jnp.arange(cfg.n_seqs, dtype=jnp.int32),
+                          k_new, v_new, pos)
+    lv = live_mask(cfg, jnp.where(pos >= 0, pos + K, 0))
+    st = tk.record_reads(cfg, st, page_table(cfg, st).reshape(-1),
+                         lv.reshape(-1))
+    st = tk.record_touches(cfg, st, page_table(cfg, st).reshape(-1),
+                           lv.reshape(-1))
     return out, st
 
 

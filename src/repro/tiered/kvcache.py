@@ -360,6 +360,40 @@ def lookup(cfg: TieredConfig, st: TieredState, page_ids, live=None):
     return dev.reshape(B, NP), st
 
 
+def record_touches(cfg: TieredConfig, st: TieredState, ids,
+                   enable) -> TieredState:
+    """Record one hotness-tracker touch per enabled page id (the
+    ``lookup`` tail without the translation) — the fused decode path's
+    accounting hook: translation is the index map there, but the policy
+    tracker must still see every live page or maintenance would starve."""
+    return _tr_replace(st, pol_track.record(cfg.pol, _tr_view(cfg, st),
+                                            ids, now=_now(cfg, st),
+                                            enable=enable))
+
+
+def record_reads(cfg: TieredConfig, st: TieredState, ids,
+                 lv) -> TieredState:
+    """Read-side accounting for the fused decode path, with ``lookup``'s
+    cold/steady split: a live page whose ``dev_table`` row is not yet
+    cached counts one translation (the leaf entry IS the translation —
+    no walk runs) and caches its row; an already-cached page counts one
+    ``dev_table`` hit.  Keeps ``trimma_translated_pages_total`` /
+    ``trimma_dev_table_hits_total`` meaningful on the fused path, where
+    no page table is ever materialised.  ``ids``/``lv`` are flat."""
+    if not cfg.cache_device_table:
+        return st._replace(lookups=st.lookups + lv.sum(dtype=jnp.int32))
+    valid = st.dev_valid[ids]
+    cold = lv & ~valid
+    entry = st.leaf_table[ids]
+    dev = jnp.where(entry != INVALID, entry, cfg.fast_slots + ids)
+    idx = jnp.where(cold, ids, cfg.n_logical)
+    return st._replace(
+        dev_table=st.dev_table.at[idx].set(dev, mode="drop"),
+        dev_valid=st.dev_valid.at[idx].set(True, mode="drop"),
+        lookups=st.lookups + cold.sum(dtype=jnp.int32),
+        dev_hits=st.dev_hits + (lv & valid).sum(dtype=jnp.int32))
+
+
 def unified_pools(st: TieredState):
     """LEGACY: concatenated (fast | slow) pools — a full KV-cache copy.
     The decode path no longer calls this (the split-pool kernel reads both
@@ -432,6 +466,51 @@ def append_token(cfg: TieredConfig, st: TieredState, seq_ids, k, v, pos):
         # R + write_weight*W accumulation without double counting
         st = _tr_replace(st, pol_track.record(
             cfg.pol, _tr_view(cfg, st), ids, now=_now(cfg, st), enable=ok))
+    return st
+
+
+def append_routing(cfg: TieredConfig, st: TieredState, seq_ids, pos, k_tok):
+    """Routing for ``k_tok`` consecutive new tokens per lane starting at
+    ``pos`` [B]: (ok, ids, fast_idx, slow_idx, off), all [B, k_tok].
+    Masked-out entries carry the out-of-bounds sentinel their pool's
+    ``mode="drop"`` scatter drops.  Idle lanes (``pos < 0``) are fully
+    masked — a parked lane's later tokens (``pos + i >= 0``) must not
+    alias page 0."""
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), seq_ids.shape)
+    pgrid = pos[:, None] + jnp.arange(k_tok, dtype=jnp.int32)
+    page = pgrid // cfg.page_tokens
+    off = pgrid % cfg.page_tokens
+    ok = (pos[:, None] >= 0) & (page >= 0) & (page < cfg.max_pages_per_seq)
+    ids = logical_page(cfg, seq_ids[:, None],
+                       jnp.clip(page, 0, cfg.max_pages_per_seq - 1))
+    entry = st.leaf_table[ids]
+    in_fast = entry != INVALID
+    fast_idx = jnp.where(ok & in_fast, entry, cfg.fast_slots)
+    slow_idx = jnp.where(ok & ~in_fast, ids, cfg.n_logical)
+    return ok, ids, fast_idx, slow_idx, off
+
+
+def append_tokens(cfg: TieredConfig, st: TieredState, seq_ids, k, v, pos):
+    """k-token ``append_token``: k, v [B, K, KV, hd] are K consecutive new
+    tokens per lane, lane b's token i landing at position ``pos[b] + i``.
+    One batched routed scatter per pool — bitwise equal to K sequential
+    ``append_token`` calls (routing cannot change mid-call: appends never
+    move pages, and all K offsets derive from the same leaf entries)."""
+    K = k.shape[1]
+    ok, ids, fast_idx, slow_idx, off = append_routing(cfg, st, seq_ids,
+                                                      pos, K)
+    dt = st.fast_k.dtype
+    st = st._replace(
+        fast_k=st.fast_k.at[fast_idx, :, off].set(k.astype(dt), mode="drop"),
+        fast_v=st.fast_v.at[fast_idx, :, off].set(v.astype(dt), mode="drop"),
+        slow_k=st.slow_k.at[slow_idx, :, off].set(k.astype(dt), mode="drop"),
+        slow_v=st.slow_v.at[slow_idx, :, off].set(v.astype(dt), mode="drop"),
+        wtouch=st.wtouch.at[jnp.where(ok, ids, cfg.n_logical)].add(
+            1, mode="drop"))
+    if cfg.pol.write_weight > 1:
+        st = _tr_replace(st, pol_track.record(
+            cfg.pol, _tr_view(cfg, st), ids.reshape(-1),
+            now=_now(cfg, st), enable=ok.reshape(-1)))
     return st
 
 
@@ -557,24 +636,28 @@ def _leaf_hosting_slot(cfg: TieredConfig, leaf):
 
 
 def _drop_entry(cfg: TieredConfig, st: TieredState, pid, enable,
-                copy_back_from=None) -> TieredState:
+                copy_back_from=None, apply_pools: bool = True
+                ) -> TieredState:
     """Shared eviction tail: clear pid's iRT entry (engine op), update the
     iRC (entry becomes identity), write the identity translation through
     the device table, optionally copy the fast bytes home (a migration-
-    engine gather + masked scatter)."""
+    engine gather + masked scatter).  ``apply_pools=False`` skips the byte
+    copy but keeps every metadata effect and counter — the descriptor
+    record/replay path (stacked maintenance) moves the bytes itself."""
     pv = jnp.where(enable, pid, 0)
     if copy_back_from is not None:
-        src = jnp.where(enable, copy_back_from, 0)
-        st = st._replace(
-            slow_k=st.slow_k.at[pv].set(
-                jnp.where(enable, _page_gather(cfg, st.fast_k, src),
-                          st.slow_k[pv])),
-            slow_v=st.slow_v.at[pv].set(
-                jnp.where(enable, _page_gather(cfg, st.fast_v, src),
-                          st.slow_v[pv])),
-            # every fast->slow copy-back is migration bandwidth, whether a
-            # scheduler demotion, a FIFO victim or a forced metadata evict
-            demo_pages=st.demo_pages + jnp.where(enable, 1, 0))
+        if apply_pools:
+            src = jnp.where(enable, copy_back_from, 0)
+            st = st._replace(
+                slow_k=st.slow_k.at[pv].set(
+                    jnp.where(enable, _page_gather(cfg, st.fast_k, src),
+                              st.slow_k[pv])),
+                slow_v=st.slow_v.at[pv].set(
+                    jnp.where(enable, _page_gather(cfg, st.fast_v, src),
+                              st.slow_v[pv])))
+        # every fast->slow copy-back is migration bandwidth, whether a
+        # scheduler demotion, a FIFO victim or a forced metadata evict
+        st = st._replace(demo_pages=st.demo_pages + jnp.where(enable, 1, 0))
     st = _irt_replace(st, irt_ops.invalidate(_irt_view(st), pv[None],
                                              enable[None]))
     st = st._replace(**rc_ops.invalidate(
@@ -587,6 +670,18 @@ def migrate_one(cfg: TieredConfig, st: TieredState, page_id, enable):
     """Migrate one hot logical page into the fast pool (FIFO victim,
     skipping allocated-metadata slots; metadata priority on leaf
     allocation).  All updates masked by ``enable``."""
+    st, _ = _migrate_one_desc(cfg, st, page_id, enable)
+    return st
+
+
+def _migrate_one_desc(cfg: TieredConfig, st: TieredState, page_id, enable,
+                      apply_pools: bool = True):
+    """``migrate_one`` body, returning ``(state, desc)`` where ``desc``
+    records the (up to three) page copies the move implies — victim
+    copy-back, install, forced-evict copy-back — as (src, dst, enable)
+    scalar triples.  With ``apply_pools=False`` the copies are *only*
+    recorded: the stacked maintenance path replays them once over the
+    whole ``[L, ...]`` pool stack instead of per layer."""
     pid = jnp.where(enable, page_id, 0)
     already = st.leaf_table[pid] != INVALID
     en = enable & ~already
@@ -619,17 +714,20 @@ def migrate_one(cfg: TieredConfig, st: TieredState, page_id, enable):
     # which append_token keeps mirrored) --------------------------------
     o = st.slot_owner[v]
     has_o = en & (o != INVALID)
-    st = _drop_entry(cfg, st, o, has_o, copy_back_from=jnp.where(en, v, 0))
+    st = _drop_entry(cfg, st, o, has_o, copy_back_from=jnp.where(en, v, 0),
+                     apply_pools=apply_pools)
 
     # --- install the page (migration-engine gather from the slow home) ----
     vv = jnp.where(en, v, 0)
+    if apply_pools:
+        st = st._replace(
+            fast_k=st.fast_k.at[vv].set(
+                jnp.where(en, _page_gather(cfg, st.slow_k, pid),
+                          st.fast_k[vv])),
+            fast_v=st.fast_v.at[vv].set(
+                jnp.where(en, _page_gather(cfg, st.slow_v, pid),
+                          st.fast_v[vv])))
     st = st._replace(
-        fast_k=st.fast_k.at[vv].set(
-            jnp.where(en, _page_gather(cfg, st.slow_k, pid),
-                      st.fast_k[vv])),
-        fast_v=st.fast_v.at[vv].set(
-            jnp.where(en, _page_gather(cfg, st.slow_v, pid),
-                      st.fast_v[vv])),
         slot_owner=st.slot_owner.at[vv].set(
             jnp.where(en, pid, st.slot_owner[vv])),
         migrations=st.migrations + jnp.where(en, 1, 0),
@@ -649,28 +747,42 @@ def migrate_one(cfg: TieredConfig, st: TieredState, page_id, enable):
     x = st.slot_owner[hv0]
     need = en & was_free & (x != INVALID) & (h < cfg.fast_slots)
     hv = jnp.where(need, h, 0)
-    st = _drop_entry(cfg, st, x, need, copy_back_from=hv)
+    st = _drop_entry(cfg, st, x, need, copy_back_from=hv,
+                     apply_pools=apply_pools)
     st = st._replace(
         slot_owner=st.slot_owner.at[hv].set(
             jnp.where(need, INVALID, st.slot_owner[hv])),
         forced_evict=st.forced_evict + jnp.where(need, 1, 0))
-    return st
+    desc = {"cb1_src": jnp.where(en, v, 0), "cb1_dst": jnp.where(has_o, o, 0),
+            "cb1_en": has_o,
+            "in_src": pid, "in_dst": vv, "in_en": en,
+            "cb2_src": hv, "cb2_dst": jnp.where(need, x, 0), "cb2_en": need}
+    return st, desc
 
 
 def demote_one(cfg: TieredConfig, st: TieredState, page_id, enable):
     """Demote one resident page back to its slow home: copy the fast bytes
     home, clear the iRT entry (engine op) + slot, reset its hotness.  All
     updates masked by ``enable``; non-resident pages are a no-op."""
+    st, _ = _demote_one_desc(cfg, st, page_id, enable)
+    return st
+
+
+def _demote_one_desc(cfg: TieredConfig, st: TieredState, page_id, enable,
+                     apply_pools: bool = True):
+    """``demote_one`` body returning ``(state, desc)`` — one copy-back
+    triple; see ``_migrate_one_desc``."""
     pid = jnp.where(enable, page_id, 0)
     entry = st.leaf_table[pid]
     en = enable & (entry != INVALID)
     slot = jnp.where(en, entry, 0)
-    st = _drop_entry(cfg, st, pid, en, copy_back_from=slot)
+    st = _drop_entry(cfg, st, pid, en, copy_back_from=slot,
+                     apply_pools=apply_pools)
     st = st._replace(
         slot_owner=st.slot_owner.at[slot].set(
             jnp.where(en, INVALID, st.slot_owner[slot])),
         demotions=st.demotions + jnp.where(en, 1, 0))
-    return st
+    return st, {"cb1_src": slot, "cb1_dst": pid, "cb1_en": en}
 
 
 def release_seq(cfg: TieredConfig, st: TieredState, seq) -> TieredState:
@@ -724,7 +836,8 @@ def run_scheduler(cfg: TieredConfig, st: TieredState,
     mm = pol.max_moves if max_moves is None else int(max_moves)
     sc, resident, now = _plan_inputs(cfg, st)
     p = pol_sched.plan(pol, sc, resident, mm)
-    return _apply_plan(cfg, st, p, now)
+    st, _, _ = _apply_plan(cfg, st, p, now)
+    return st
 
 
 def run_scheduler_tenants(cfg: TieredConfig, st: TieredState, page_tenant,
@@ -741,7 +854,8 @@ def run_scheduler_tenants(cfg: TieredConfig, st: TieredState, page_tenant,
     ``TieredConfig``)."""
     sc, resident, now = _plan_inputs(cfg, st)
     p = pol_sched.plan_tenants(pols, sc, resident, page_tenant, quotas)
-    return _apply_plan(cfg, st, p, now)
+    st, _, _ = _apply_plan(cfg, st, p, now)
+    return st
 
 
 def _plan_inputs(cfg: TieredConfig, st: TieredState):
@@ -760,23 +874,27 @@ def _plan_inputs(cfg: TieredConfig, st: TieredState):
     return sc, resident, now
 
 
-def _apply_plan(cfg: TieredConfig, st: TieredState, p, now) -> TieredState:
+def _apply_plan(cfg: TieredConfig, st: TieredState, p, now,
+                apply_pools: bool = True):
     """Shared apply tail: demotions, then promotions, then tracker
-    forget/decay and the epoch advance."""
+    forget/decay and the epoch advance.  Returns ``(state, demote_descs,
+    promote_descs)`` — the copy descriptors each move recorded
+    (move-major arrays), which the stacked path replays over the whole
+    layer stack when ``apply_pools=False`` left the bytes in place."""
     pol = cfg.pol
     n = cfg.n_logical
 
     def dbody(s, args):
         pid, en = args
-        return demote_one(cfg, s, pid, en), None
+        return _demote_one_desc(cfg, s, pid, en, apply_pools=apply_pools)
 
-    st, _ = jax.lax.scan(dbody, st, (p.demote_ids, p.demote_en))
+    st, ddesc = jax.lax.scan(dbody, st, (p.demote_ids, p.demote_en))
 
     def pbody(s, args):
         pid, en = args
-        return migrate_one(cfg, s, pid, en), None
+        return _migrate_one_desc(cfg, s, pid, en, apply_pools=apply_pools)
 
-    st, _ = jax.lax.scan(pbody, st, (p.promote_ids, p.promote_en))
+    st, pdesc = jax.lax.scan(pbody, st, (p.promote_ids, p.promote_en))
 
     # demoted pages restart cold (write intensity included); promoted
     # pages keep their score so the demotion band can't reclaim them
@@ -788,9 +906,10 @@ def _apply_plan(cfg: TieredConfig, st: TieredState, p, now) -> TieredState:
     st = _tr_replace(st, tr)
     didx = jnp.where(p.demote_en, p.demote_ids, n)
     wtouch = st.wtouch.at[didx].set(0, mode="drop")
-    return st._replace(
+    st = st._replace(
         epoch=st.epoch + 1,
         wtouch=jnp.where(tick, wtouch >> 1, wtouch))
+    return st, ddesc, pdesc
 
 
 def migrate_hot(cfg: TieredConfig, st: TieredState, max_moves: int = 4):
@@ -803,3 +922,234 @@ def metadata_pages(cfg: TieredConfig, st: TieredState) -> jnp.ndarray:
     """Current metadata footprint in pages (allocated leaves), vs the
     linear-table equivalent n_leaf (Figure 9 analogue for serving)."""
     return (st.leaf_cnt > 0).sum()
+
+
+# ---------------------------------------------------------------------------
+# layer-stacked variants (DESIGN.md §11)
+#
+# A transformer's L layers share one residency history: every metadata
+# mutation is driven by lane-level events (appends, lookups, releases,
+# maintenance) that are identical across layers, so from the broadcast
+# init onward the leaf table, slot owners, trackers and counters are the
+# same in every layer — only the pool *bytes* differ.  The ops below
+# exploit that invariant: metadata work (scoring, planning, iRT/iRC
+# updates, counters) runs ONCE on layer 0, the per-move page copies are
+# recorded as descriptors and replayed over the whole [L, ...] pool
+# stack, and the resulting metadata is broadcast back — bit-identical to
+# ``jax.vmap`` over L independent passes at 1/L the metadata cost.
+# ---------------------------------------------------------------------------
+
+_POOL_FIELDS = ("fast_k", "fast_v", "slow_k", "slow_v")
+
+
+def _layer0(sts: TieredState) -> TieredState:
+    return jax.tree.map(lambda x: x[0], sts)
+
+
+def _restack(st0: TieredState, pools, L: int) -> TieredState:
+    """Broadcast layer-0 metadata back over L layers around the (already
+    stacked) pools."""
+    rep = {f: jnp.broadcast_to(getattr(st0, f),
+                               (L,) + getattr(st0, f).shape)
+           for f in TieredState._fields if f not in _POOL_FIELDS}
+    rep.update(dict(zip(_POOL_FIELDS, pools)))
+    return TieredState(**rep)
+
+
+def _copy_page_stacked(cfg: TieredConfig, dst_pool, src_pool, src, dst, en):
+    """Replay one recorded page copy on every layer of a [L, n, KV, P, hd]
+    pool pair: gather row ``src`` of each layer through the migration
+    engine, scatter to row ``dst`` (dropped when ``en`` is false)."""
+    L, n_src = src_pool.shape[:2]
+    n_dst = dst_pool.shape[1]
+    KV, P, hd = src_pool.shape[2:]
+    rows = (jnp.where(en, src, 0)
+            + jnp.arange(L, dtype=jnp.int32) * n_src)
+    pages = remap_gather_op(src_pool.reshape(L * n_src, KV * P, hd), rows,
+                            impl=cfg.gather_impl).reshape(L, KV, P, hd)
+    di = jnp.where(en, dst, n_dst)
+    return dst_pool.at[:, di].set(pages, mode="drop")
+
+
+def _replay_descs(cfg: TieredConfig, pools, ddesc, pdesc):
+    """Apply recorded maintenance copies to the stacked pools, in exactly
+    the order the metadata pass recorded them: all demote copy-backs,
+    then per promotion victim copy-back -> install -> forced-evict
+    copy-back.  Move order matters (a promotion may install into a slot
+    an earlier move freed), so moves replay sequentially; layers replay
+    together inside each move."""
+    def dstep(pl, d):
+        fk, fv, sk, sv = pl
+        sk = _copy_page_stacked(cfg, sk, fk, d["cb1_src"], d["cb1_dst"],
+                                d["cb1_en"])
+        sv = _copy_page_stacked(cfg, sv, fv, d["cb1_src"], d["cb1_dst"],
+                                d["cb1_en"])
+        return (fk, fv, sk, sv), None
+
+    if ddesc is not None:
+        pools, _ = jax.lax.scan(dstep, pools, ddesc)
+
+    def pstep(pl, d):
+        fk, fv, sk, sv = pl
+        sk = _copy_page_stacked(cfg, sk, fk, d["cb1_src"], d["cb1_dst"],
+                                d["cb1_en"])
+        sv = _copy_page_stacked(cfg, sv, fv, d["cb1_src"], d["cb1_dst"],
+                                d["cb1_en"])
+        fk = _copy_page_stacked(cfg, fk, sk, d["in_src"], d["in_dst"],
+                                d["in_en"])
+        fv = _copy_page_stacked(cfg, fv, sv, d["in_src"], d["in_dst"],
+                                d["in_en"])
+        sk = _copy_page_stacked(cfg, sk, fk, d["cb2_src"], d["cb2_dst"],
+                                d["cb2_en"])
+        sv = _copy_page_stacked(cfg, sv, fv, d["cb2_src"], d["cb2_dst"],
+                                d["cb2_en"])
+        return (fk, fv, sk, sv), None
+
+    if pdesc is not None:
+        pools, _ = jax.lax.scan(pstep, pools, pdesc)
+    return pools
+
+
+def _stacked_pools(sts: TieredState):
+    return (sts.fast_k, sts.fast_v, sts.slow_k, sts.slow_v)
+
+
+def plan_maintenance(cfg: TieredConfig, sts: TieredState,
+                     max_moves: int | None = None):
+    """Score + plan from layer 0 of a stacked state (one plan serves every
+    layer).  Returns the ``core/policy`` Plan pytree;
+    ``apply_maintenance_stacked`` applies it — possibly one decode step
+    later (the engine double-buffers the pair; write-through makes the
+    bytes order-independent, DESIGN.md §11)."""
+    st0 = _layer0(sts)
+    pol = cfg.pol
+    mm = pol.max_moves if max_moves is None else int(max_moves)
+    sc, resident, now = _plan_inputs(cfg, st0)
+    return pol_sched.plan(pol, sc, resident, mm)
+
+
+def apply_maintenance_stacked(cfg: TieredConfig, sts: TieredState,
+                              p) -> TieredState:
+    """Apply a Plan to a stacked state: metadata once on layer 0 with
+    pool writes recorded as descriptors, copies replayed over the [L, ...]
+    stack, metadata broadcast back."""
+    L = sts.fast_k.shape[0]
+    st0 = _layer0(sts)
+    st0, ddesc, pdesc = _apply_plan(cfg, st0, p, _now(cfg, st0),
+                                    apply_pools=False)
+    pools = _replay_descs(cfg, _stacked_pools(sts), ddesc, pdesc)
+    return _restack(st0, pools, L)
+
+
+def run_scheduler_stacked(cfg: TieredConfig, sts: TieredState,
+                          max_moves: int | None = None) -> TieredState:
+    """One synchronous maintenance pass over a stacked [L, ...] state —
+    the batched replacement for ``jax.vmap(run_scheduler)`` over L."""
+    return apply_maintenance_stacked(cfg, sts,
+                                     plan_maintenance(cfg, sts, max_moves))
+
+
+def run_scheduler_tenants_stacked(cfg: TieredConfig, sts: TieredState,
+                                  page_tenant, pols, quotas) -> TieredState:
+    """Stacked ``run_scheduler_tenants`` (always synchronous — the tenant
+    map can go stale across a deferred apply, so the engine never
+    double-buffers this path)."""
+    L = sts.fast_k.shape[0]
+    st0 = _layer0(sts)
+    sc, resident, now = _plan_inputs(cfg, st0)
+    p = pol_sched.plan_tenants(pols, sc, resident, page_tenant, quotas)
+    st0, ddesc, pdesc = _apply_plan(cfg, st0, p, now, apply_pools=False)
+    pools = _replay_descs(cfg, _stacked_pools(sts), ddesc, pdesc)
+    return _restack(st0, pools, L)
+
+
+def release_seq_stacked(cfg: TieredConfig, sts: TieredState,
+                        seq) -> TieredState:
+    """Stacked ``release_seq``: pure metadata (no bytes move), so layer 0
+    releases and the result broadcasts."""
+    L = sts.fast_k.shape[0]
+    st0 = release_seq(cfg, _layer0(sts), seq)
+    return _restack(st0, _stacked_pools(sts), L)
+
+
+def prefill_tokens_stacked(cfg: TieredConfig, sts: TieredState, seq, k, v,
+                           length=None) -> TieredState:
+    """Stacked ``prefill_tokens``: k, v [L, S, KV, hd] (all layers of one
+    prompt's post-RoPE K/V) land in the slow homes as one scatter per
+    pool.  Same preconditions as the per-layer op."""
+    L, S, KV, hd = k.shape
+    P = cfg.page_tokens
+    npages = -(-S // P)
+    if npages > cfg.max_pages_per_seq:
+        raise ValueError(
+            f"prompt of {S} tokens needs {npages} pages; sequence capacity "
+            f"is {cfg.max_pages_per_seq}")
+    length = jnp.asarray(S if length is None else length, jnp.int32)
+    dt = sts.slow_k.dtype
+    pad = npages * P - S
+
+    def paged(x):
+        return jnp.pad(x.astype(dt), ((0, 0), (0, pad), (0, 0), (0, 0))) \
+            .reshape(L, npages, P, KV, hd).transpose(0, 1, 3, 2, 4)
+
+    seq = jnp.asarray(seq, jnp.int32)
+    j = jnp.arange(npages, dtype=jnp.int32)
+    rows = jnp.where(j * P < length,
+                     seq * cfg.max_pages_per_seq + j, cfg.n_logical)
+    return sts._replace(
+        slow_k=sts.slow_k.at[:, rows].set(paged(k), mode="drop"),
+        slow_v=sts.slow_v.at[:, rows].set(paged(v), mode="drop"))
+
+
+def prefill_chunk_stacked(cfg: TieredConfig, sts: TieredState, seq, k, v,
+                          start, length) -> TieredState:
+    """Stacked ``prefill_chunk``: k, v [L, C, KV, hd]; each page routes to
+    its current tier via the (layer-uniform) layer-0 leaf table."""
+    L, C, KV, hd = k.shape
+    P = cfg.page_tokens
+    npages = -(-C // P)
+    start = jnp.asarray(start, jnp.int32)
+    length = jnp.asarray(length, jnp.int32)
+    dt = sts.slow_k.dtype
+    pad = npages * P - C
+
+    def paged(x):
+        return jnp.pad(x.astype(dt), ((0, 0), (0, pad), (0, 0), (0, 0))) \
+            .reshape(L, npages, P, KV, hd).transpose(0, 1, 3, 2, 4)
+
+    seq = jnp.asarray(seq, jnp.int32)
+    j = start // P + jnp.arange(npages, dtype=jnp.int32)
+    ok = (j * P < length) & (j < cfg.max_pages_per_seq)
+    ids = logical_page(cfg, seq, jnp.clip(j, 0, cfg.max_pages_per_seq - 1))
+    entry = sts.leaf_table[0][ids]
+    in_fast = entry != INVALID
+    fast_idx = jnp.where(ok & in_fast, entry, cfg.fast_slots)
+    slow_idx = jnp.where(ok & ~in_fast, ids, cfg.n_logical)
+    return sts._replace(
+        fast_k=sts.fast_k.at[:, fast_idx].set(paged(k), mode="drop"),
+        fast_v=sts.fast_v.at[:, fast_idx].set(paged(v), mode="drop"),
+        slow_k=sts.slow_k.at[:, slow_idx].set(paged(k), mode="drop"),
+        slow_v=sts.slow_v.at[:, slow_idx].set(paged(v), mode="drop"))
+
+
+def admit_pages_stacked(cfg: TieredConfig, sts: TieredState, seq, length,
+                        n_pages: int) -> TieredState:
+    """Stacked ``admit_pages``: the promotion scan runs once on layer-0
+    metadata, the install copies replay over the stack."""
+    L = sts.fast_k.shape[0]
+    st0 = _layer0(sts)
+    seq = jnp.asarray(seq, jnp.int32)
+    length = jnp.asarray(length, jnp.int32)
+    j = jnp.arange(int(n_pages), dtype=jnp.int32)
+    en = (j * cfg.page_tokens < length) & (j < cfg.max_pages_per_seq)
+    ids = logical_page(cfg, seq, jnp.clip(j, 0, cfg.max_pages_per_seq - 1))
+
+    def body(s, args):
+        pid, e = args
+        return _migrate_one_desc(cfg, s, pid, e, apply_pools=False)
+
+    st0, pdesc = jax.lax.scan(body, st0, (ids, en))
+    st0 = _tr_replace(st0, pol_track.record(cfg.pol, _tr_view(cfg, st0), ids,
+                                            now=_now(cfg, st0), enable=en))
+    pools = _replay_descs(cfg, _stacked_pools(sts), None, pdesc)
+    return _restack(st0, pools, L)

@@ -40,7 +40,7 @@ except ImportError:                      # dev-only dep (requirements-dev.txt)
     HAVE_HYP = False
 
 SMALL = dict(fast_total_blocks=256, ratio=8, n_sets=4)
-SWEEP = ["mea", "on_demand", "write_aware"]      # the non-default presets
+SWEEP = ["mea", "on_demand", "write_aware", "topk"]  # non-default presets
 
 
 def _tiered_cfg(policy=None, **kw):
@@ -291,6 +291,31 @@ def test_policy_presets_through_run_many():
             assert 0 <= o["serve_rate"] <= 1
     # the axis is live: on-demand migrates far more than the threshold gate
     assert res["on_demand"][0]["swaps"] > res["threshold"][0]["swaps"]
+
+
+def test_topk_gate_budget_bounded():
+    """The epoch-ranked topk decider (per-access form): installs stay
+    within the per-epoch budget AND the budget actually refreshes at
+    epoch edges — the starvation regression where a decay epoch longer
+    than the whole trace left exactly ``topk`` installs, total, and a
+    0.00 serve rate in the policy sweep."""
+    cfg = trimma_cache(**SMALL)
+    blocks, writes = generate_trace(WORKLOADS["pr"], cfg.slow_blocks,
+                                    4096, 0)
+    pol = get_policy("topk")
+    out = run(dataclasses.replace(cfg, policy=pol), HBM3_DDR5,
+              blocks, writes)
+    n_epochs = 4096 >> pol.decay_shift
+    assert 4096 > (1 << pol.decay_shift), \
+        "preset epoch no longer fits the sweep traces — starvation is back"
+    assert out["installs"] <= pol.topk * (n_epochs + 1)
+    assert out["installs"] > pol.topk        # the budget refreshed mid-run
+    assert out["serve_rate"] > 0.05          # the installs actually serve
+    # ranked admission is the point: far fewer installs than the
+    # install-on-every-miss threshold default, at a useful hit rate
+    thr = run(dataclasses.replace(cfg, policy=threshold_policy()),
+              HBM3_DDR5, blocks, writes)
+    assert out["installs"] < thr["installs"] // 4
 
 
 @pytest.mark.parametrize("preset", ["threshold"] + SWEEP)
