@@ -3,7 +3,7 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: verify test bench-smoke bench-serve bench-engine bench-sched \
-	obs-smoke bench golden examples-smoke
+	obs-smoke flight-smoke http-smoke bench golden examples-smoke
 
 verify: test bench-smoke examples-smoke
 
@@ -47,6 +47,48 @@ bench-sched:
 obs-smoke:
 	$(PY) -m benchmarks.run --obs
 	$(PY) -m benchmarks.check_bench BENCH_smoke.json obs
+
+# flight-recorder smoke (DESIGN.md §12): recorder-on vs recorder-off
+# engine runs on the same trace; the gate requires bit-identical logits,
+# <= 3% decode overhead, a real recorded lifecycle (promotes AND
+# releases) and exact ring accounting, then checks the gated headline
+# numbers against the recent benchmarks/results/history.jsonl trajectory
+flight-smoke:
+	$(PY) -m benchmarks.run --flight
+	$(PY) -m benchmarks.check_bench BENCH_smoke.json flight
+	$(PY) -m benchmarks.check_bench BENCH_smoke.json --against-history
+
+# live-endpoint smoke: a short serving run holding /metrics + /healthz +
+# /debug/state up after drain, curled and parse-validated from the shell
+# (the same scrape a real Prometheus would make)
+http-smoke:
+	$(PY) -m repro.launch.serve --arch llama3-8b --smoke --requests 4 \
+	    --batch 2 --max-new 8 --backend tiered --scheduler greedy \
+	    --flight --slo '*:latency:60000:0.9' --http-port 8793 \
+	    --hold 20 & \
+	pid=$$!; \
+	ok=""; \
+	for i in $$(seq 1 150); do \
+	    curl -sf http://127.0.0.1:8793/metrics 2>/dev/null \
+	        | grep -q engine_steps_total && ok=1 && break; \
+	    sleep 1; \
+	done; \
+	test -n "$$ok" || { echo "http-smoke: /metrics never published"; \
+	    kill $$pid 2>/dev/null; exit 1; }; \
+	curl -sf http://127.0.0.1:8793/healthz; echo; \
+	curl -sf http://127.0.0.1:8793/metrics > BENCH_http_metrics.txt; \
+	curl -sf http://127.0.0.1:8793/debug/state > BENCH_http_state.json; \
+	$(PY) -c "import json,sys; \
+	    sys.path.insert(0, 'src'); \
+	    from repro.obs import parse_prometheus; \
+	    p = parse_prometheus(open('BENCH_http_metrics.txt').read()); \
+	    assert 'engine_steps_total' in p['families'], sorted(p['families']); \
+	    s = json.load(open('BENCH_http_state.json')); \
+	    assert 'steps' in s and 'lanes' in s, sorted(s); \
+	    print('http-smoke:', len(p['families']), 'families,', \
+	          'step', s['steps'])"; \
+	kill $$pid 2>/dev/null; wait $$pid 2>/dev/null; \
+	echo "http-smoke OK"
 
 # every example on a tiny geometry (EXAMPLES_SMOKE=1), so the demos can't
 # silently rot — CI runs this too

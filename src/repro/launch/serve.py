@@ -78,6 +78,24 @@ def main():
                          "https://ui.perfetto.dev) of the engine phases")
     ap.add_argument("--obs-every", type=int, default=4,
                     help="engine steps between metric samples")
+    ap.add_argument("--flight", action="store_true",
+                    help="page-lifecycle flight recorder (tiered only, "
+                         "DESIGN.md §12): bounded in-graph event ring, "
+                         "drained into residency / reuse / ping-pong "
+                         "analytics at drain")
+    ap.add_argument("--flight-capacity", type=int, default=2048,
+                    help="--flight: event-ring slots (oldest drop first)")
+    ap.add_argument("--slo", default=None,
+                    help="per-tenant SLO spec "
+                         "'tenant:stat:target_ms[:objective[:window]]"
+                         ",...' (tenant '*' matches all; stat latency|"
+                         "ttft), e.g. '*:latency:2000:0.9:64'")
+    ap.add_argument("--http-port", type=int, default=None,
+                    help="serve live /metrics + /healthz + /debug/state "
+                         "on this port for the whole run (0 = ephemeral)")
+    ap.add_argument("--hold", type=float, default=0.0,
+                    help="--http-port: keep the endpoints up this many "
+                         "seconds after drain (curl smoke window)")
     args = ap.parse_args()
 
     import jax
@@ -98,20 +116,37 @@ def main():
     tenants = _parse_tenants(args.tenants) if args.tenants else ()
     params = init_params(cfg, jax.random.key(0))
     obs = None
-    if args.prom_out or args.metrics_jsonl or args.trace_out:
+    if (args.prom_out or args.metrics_jsonl or args.trace_out
+            or args.http_port is not None):
         from repro.obs import ObsConfig
         obs = ObsConfig(sample_every=args.obs_every,
                         prom_path=args.prom_out,
                         jsonl_path=args.metrics_jsonl,
-                        trace_path=args.trace_out)
+                        trace_path=args.trace_out,
+                        http_port=args.http_port)
+    flight = None
+    if args.flight:
+        if args.backend != "tiered":
+            raise SystemExit("--flight needs --backend tiered (the "
+                             "recorder taps the Trimma move descriptors)")
+        from repro.obs import FlightConfig
+        flight = FlightConfig(capacity=args.flight_capacity)
+    slos = ()
+    if args.slo:
+        from repro.obs import parse_slos
+        slos = parse_slos(args.slo)
     try:
         eng = Engine(cfg, params, EngineConfig(
             batch=args.batch, max_len=args.max_len, backend=args.backend,
             policy=args.policy, scheduler=args.scheduler or "greedy",
             prefill_chunk=args.prefill_chunk, tenants=tenants,
-            admit_pages=args.admit_pages, obs=obs))
+            admit_pages=args.admit_pages, obs=obs, flight=flight,
+            slos=slos))
     except NotImplementedError as e:
         raise SystemExit(f"{cfg.name}: {e}")
+    if eng.obs_server is not None:
+        print(f"obs: live endpoints at {eng.obs_server.url} "
+              f"(/metrics /healthz /debug/state)")
     rng = np.random.default_rng(0)
     t0 = time.time()
     names = [t.name for t in tenants] or ["default"]
@@ -135,12 +170,40 @@ def main():
         print(f"fairness: {stats['fairness']}")
     if eng.counters:
         print(f"tiered counters: {eng.counters}")
+    if eng.slo is not None:
+        rows = eng.slo.summary()
+        if not rows:
+            print("slo: no completed requests observed")
+        for r in rows:
+            print(f"slo: {r['tenant']}/{r['stat']} target {r['target_ms']:g}"
+                  f" ms obj {r['objective']:g} -> burn {r['burn_rate']:.2f}"
+                  f" ({r['window_violations']}/{r['window_n']} violating "
+                  f"in window) {'OK' if r['ok'] else 'BURNING'}")
+    fs = eng.flight_stats()
+    if fs is not None:
+        if fs["n_events"] == 0:
+            print("flight: no events recorded")
+        else:
+            res, pp = fs["residency"], fs["pingpong"]
+            print(f"flight: {fs['n_events']} events "
+                  f"({fs['dropped']} dropped) by_kind={fs['by_kind']}")
+            if res.get("count"):
+                print(f"flight: residency mean {res['mean_steps']:.1f} "
+                      f"steps (p50 {res['p50_steps']:g}, max "
+                      f"{res['max_steps']}), ping-pong {pp['events']} "
+                      f"re-promotions within {pp['window_steps']} steps")
     if obs is not None:
         for label, path in (("prometheus", args.prom_out),
                             ("metrics jsonl", args.metrics_jsonl),
                             ("perfetto trace", args.trace_out)):
             if path:
                 print(f"obs: {label} -> {path}")
+    if eng.obs_server is not None:
+        if args.hold > 0:
+            print(f"obs: holding endpoints at {eng.obs_server.url} "
+                  f"for {args.hold:g}s")
+            time.sleep(args.hold)
+        eng.obs_server.close()
 
 
 if __name__ == "__main__":

@@ -69,6 +69,14 @@ class KVBackend(Protocol):
         ...
 
 
+def _host_num(v):
+    """Device scalar -> concrete Python number: ints stay exact ints
+    (the legacy counter contract), non-integral gauges (the derived
+    ratio metrics) keep their float value."""
+    f = float(v)
+    return int(f) if f.is_integer() else f
+
+
 # ---------------------------------------------------------------------------
 # dense: the contiguous per-layer cache (pre-refactor numerics)
 # ---------------------------------------------------------------------------
@@ -408,6 +416,17 @@ class TieredBackend:
         return state._replace(caches=tk.apply_maintenance_stacked(
             self.tcfg, state.caches, plan))
 
+    def apply_maintain_desc(self, state, plan):
+        """``apply_maintain`` that also returns the (ddesc, pdesc) move
+        descriptors — what each plan entry ACTUALLY did — so the flight
+        recorder (obs/flight, DESIGN.md §12) can stamp promote / demote
+        / evict events from the ground truth.  Bit-identical state to
+        ``apply_maintain`` (same pass, descriptors tee'd out)."""
+        from repro.tiered import kvcache as tk
+        caches, ddesc, pdesc = tk.apply_maintenance_stacked_desc(
+            self.tcfg, state.caches, plan)
+        return state._replace(caches=caches), ddesc, pdesc
+
     def release(self, state, lane):
         """Drop one lane's pages from every layer's metadata (lane
         recycle; ``pos`` untouched — the caller re-prefills).  Pure
@@ -451,6 +470,14 @@ class TieredBackend:
         return state._replace(caches=tk.admit_pages_stacked(
             self.tcfg, state.caches, lane, length, n_pages))
 
+    def admit_prefix_desc(self, state, lane, length, n_pages: int):
+        """``admit_prefix`` that also returns the install descriptors
+        (flight-recorder install / admission-eviction events)."""
+        from repro.tiered import kvcache as tk
+        caches, pdesc = tk.admit_pages_stacked_desc(
+            self.tcfg, state.caches, lane, length, n_pages)
+        return state._replace(caches=caches), pdesc
+
     def maintain_tenants(self, state, lane_tenant, pols, quotas):
         """Multi-tenant maintenance: one stacked
         ``run_scheduler_tenants`` pass (always synchronous — a tenant
@@ -467,9 +494,10 @@ class TieredBackend:
 
     def metrics(self, state) -> dict:
         """Canonical telemetry view (DESIGN.md §10): the obs tap summed
-        over the layer axis, concrete Python ints."""
+        over the layer axis, concrete Python numbers (counters stay
+        ints; the derived ratio gauges keep their fractional value)."""
         from repro.serve import tiered as srv
-        return {k: int(v)
+        return {k: _host_num(v)
                 for k, v in srv.metrics(self.tcfg, state.caches).items()}
 
     def counters(self, state) -> dict:

@@ -1,6 +1,6 @@
-"""Unified telemetry layer (DESIGN.md §10).
+"""Unified telemetry layer (DESIGN.md §10, §12).
 
-Three pieces, one namespace:
+One namespace, six pieces:
 
   ``obs.registry``  metric specs — every subsystem declares its metrics
                     next to the code that owns them;
@@ -12,10 +12,21 @@ Three pieces, one namespace:
                     JSONL time series, Prometheus text exposition;
   ``obs.trace``     structured step tracer — Chrome-trace-event JSON
                     (Perfetto) spans per engine phase, plus optional
-                    ``jax.profiler`` hooks.
+                    ``jax.profiler`` hooks;
+  ``obs.flight``    page-lifecycle flight recorder — a bounded JIT-safe
+                    event ring (install/promote/demote/evict/release)
+                    drained host-side into residency / reuse-distance /
+                    ping-pong analytics;
+  ``obs.slo``       per-tenant SLO targets with rolling-window burn
+                    rates (``engine_slo_*``);
+  ``obs.http``      live ``/metrics`` + ``/healthz`` + ``/debug/state``
+                    endpoints over a running engine.
 """
 
-from . import metrics, registry, trace  # noqa: F401
-from .hub import MetricsHub, ObsConfig, parse_prometheus  # noqa: F401
+from . import flight, metrics, registry, slo, trace  # noqa: F401
+from .flight import FlightConfig  # noqa: F401
+from .hub import (MetricsHub, ObsConfig, parse_labels,  # noqa: F401
+                  parse_prometheus)
 from .registry import MetricSpec, register  # noqa: F401
+from .slo import SLOConfig, SLOMonitor, parse_slos  # noqa: F401
 from .trace import NULL_TRACER, StepTracer  # noqa: F401

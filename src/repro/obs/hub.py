@@ -24,6 +24,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import re
 import time
 from typing import Optional
 
@@ -44,7 +45,11 @@ class ObsConfig:
     ``trace_path``    Chrome trace events (Perfetto-loadable), written
                       at drain;
     ``profiler_dir``  optional ``jax.profiler`` trace directory wrapped
-                      around the whole run (kernel-level spans).
+                      around the whole run (kernel-level spans);
+    ``http_port``     when set, the engine serves ``/metrics`` /
+                      ``/healthz`` / ``/debug/state`` live on this port
+                      for the whole run (``obs.http.ObsServer``; 0 =
+                      ephemeral, read back from ``engine.obs_server``).
     """
 
     sample_every: int = 4
@@ -52,17 +57,61 @@ class ObsConfig:
     jsonl_path: Optional[str] = None
     trace_path: Optional[str] = None
     profiler_dir: Optional[str] = None
+    http_port: Optional[int] = None
+    http_host: str = "127.0.0.1"
 
 
 def _labels_key(labels: Optional[dict]) -> tuple:
     return tuple(sorted(labels.items())) if labels else ()
 
 
+def _escape_label(v) -> str:
+    """Exposition-format label-value escaping (the format's three escape
+    sequences: backslash, double-quote, newline)."""
+    return (str(v).replace("\\", "\\\\").replace('"', '\\"')
+            .replace("\n", "\\n"))
+
+
+def _unescape_label(v: str) -> str:
+    out, i = [], 0
+    while i < len(v):
+        c = v[i]
+        if c == "\\" and i + 1 < len(v):
+            nxt = v[i + 1]
+            out.append({"\\": "\\", '"': '"', "n": "\n"}.get(nxt,
+                                                             c + nxt))
+            i += 2
+        else:
+            out.append(c)
+            i += 1
+    return "".join(out)
+
+
 def _render_name(name: str, lk: tuple) -> str:
     if not lk:
         return name
-    inner = ",".join(f'{k}="{v}"' for k, v in lk)
+    inner = ",".join(f'{k}="{_escape_label(v)}"' for k, v in lk)
     return f"{name}{{{inner}}}"
+
+
+#: one label: name="value" with escaped backslash/quote/newline inside
+_LABEL_RE = re.compile(r'(\w+)="((?:[^"\\]|\\.)*)"')
+#: one sample key: metric name + optional {label,...} block
+_KEY_RE = re.compile(r"^([A-Za-z_:][A-Za-z0-9_:]*)(?:\{(.*)\})?$")
+
+
+def parse_labels(key: str) -> tuple[str, dict]:
+    """Rendered sample key -> ``(metric_name, labels_dict)`` — the
+    inverse of ``_render_name`` (escape-aware, so values containing
+    quotes, backslashes or newlines round-trip)."""
+    m = _KEY_RE.match(key)
+    assert m, f"bad sample key: {key!r}"
+    name, inner = m.group(1), m.group(2)
+    if not inner:
+        return name, {}
+    labels = {k: _unescape_label(v)
+              for k, v in _LABEL_RE.findall(inner)}
+    return name, labels
 
 
 class MetricsHub:
@@ -106,15 +155,17 @@ class MetricsHub:
     # -- snapshot / delta -------------------------------------------------
 
     def snapshot(self) -> dict:
-        """Current values, flat ``{rendered_name: value}``."""
+        """Current values, flat ``{rendered_name: value}``.  Copies the
+        store first — the live ``/metrics`` endpoint renders from its
+        own thread while the engine records (obs/http)."""
         return {_render_name(n, lk): v
-                for (n, lk), v in sorted(self._values.items())}
+                for (n, lk), v in sorted(dict(self._values).items())}
 
     def delta(self) -> dict:
         """Counter deltas vs the previous ``sample`` (counters only —
         gauges have no delta semantics)."""
         out = {}
-        for key, v in self._values.items():
+        for key, v in dict(self._values).items():
             name, lk = key
             if registry.spec(name).kind != "counter":
                 continue
@@ -153,7 +204,7 @@ class MetricsHub:
         """Text exposition format 0.0.4 (one ``# HELP``/``# TYPE`` pair
         per metric family, then its sample lines)."""
         fams: dict[str, list[str]] = {}
-        for (name, lk), v in sorted(self._values.items()):
+        for (name, lk), v in sorted(dict(self._values).items()):
             val = int(v) if float(v).is_integer() else v
             fams.setdefault(name, []).append(
                 f"{_render_name(name, lk)} {val}")
@@ -163,7 +214,7 @@ class MetricsHub:
             lines.append(f"# HELP {name} {s.help or name}")
             lines.append(f"# TYPE {name} {s.kind}")
             lines.extend(fams[name])
-        for (name, lk), h in sorted(self._hists.items()):
+        for (name, lk), h in sorted(dict(self._hists).items()):
             s = registry.spec(name)
             lines.append(f"# HELP {name} {s.help or name}")
             lines.append(f"# TYPE {name} histogram")
@@ -198,11 +249,22 @@ class MetricsHub:
 
 def parse_prometheus(text: str) -> dict:
     """Parse a text exposition back into
-    ``{"families": {name: kind}, "samples": {rendered_name: float}}`` —
-    the validator ``make obs-smoke`` and the tests run over the emitted
-    file (a real scrape would hit the same format)."""
+    ``{"families": {name: kind}, "samples": {rendered_name: float},
+    "series": {name: [{"labels": {...}, "value": float}, ...]}}`` —
+    the validator ``make obs-smoke``, the tests and the ``/metrics``
+    curl smoke run over the emitted text (a real scrape hits the same
+    format).
+
+    ``samples`` keeps the historical flat view (rendered key -> value);
+    ``series`` decomposes every sample into (metric name, labels dict,
+    value), escape-aware, so labelled families — the per-tenant
+    ``{tenant="..."}`` samples from ``TenantBook.metrics()`` and the
+    ``engine_slo_*`` family — round-trip structurally: re-rendering a
+    series entry with ``_render_name`` reproduces its ``samples`` key
+    exactly (tests/test_obs.py pins it)."""
     families: dict[str, str] = {}
     samples: dict[str, float] = {}
+    series: dict[str, list] = {}
     for line in text.splitlines():
         line = line.strip()
         if not line:
@@ -216,5 +278,9 @@ def parse_prometheus(text: str) -> dict:
         else:
             key, _, val = line.rpartition(" ")
             assert key, f"bad sample line: {line!r}"
-            samples[key] = float(val) if val != "+Inf" else float("inf")
-    return {"families": families, "samples": samples}
+            fval = float(val) if val != "+Inf" else float("inf")
+            samples[key] = fval
+            name, labels = parse_labels(key)
+            series.setdefault(name, []).append(
+                {"labels": labels, "value": fval})
+    return {"families": families, "samples": samples, "series": series}

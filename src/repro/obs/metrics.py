@@ -106,7 +106,9 @@ def delta(cur: dict, prev: dict) -> dict:
 _INVALID = -1   # core/remap INVALID (duck-typed here to avoid the import)
 
 
-def tiered_metrics(st, page_bytes: int) -> dict:
+def tiered_metrics(st, page_bytes: int, *, n_logical: int | None = None,
+                   fast_slots: int | None = None,
+                   leaf_entries: int | None = None) -> dict:
     """Canonical metric view of a tiered KV store's in-graph counters.
 
     ``st`` is a ``TieredState`` — or a *stacked* one ([L, ...] leaves
@@ -116,6 +118,16 @@ def tiered_metrics(st, page_bytes: int) -> dict:
     jnp scalars inside jit, concrete outside; ``page_bytes`` converts the
     int32-safe page counts into bandwidth bytes at read-out (the same
     rule the legacy counters used).
+
+    The optional geometry (``TieredConfig.n_logical`` / ``fast_slots``
+    and the iRT leaf width ``E``) additionally derives the paper's
+    saved-metadata gauges (DESIGN.md §12): the identity-entry ratio
+    (fraction of logical pages with NO remap entry — only fast-resident
+    pages need one), the iRT leaf-level occupancy, and the allocated
+    leaf metadata in bytes.  The ratio gauges are scale-invariant over
+    stacking (metadata is layer-uniform, so averaging the stack equals
+    any single layer); ``trimma_metadata_bytes`` sums the stack like its
+    ``trimma_metadata_pages`` sibling.
     """
     g = lambda f: jnp.sum(getattr(st, f))  # noqa: E731
     out = {canon: g(field) for field, canon in TIERED_FIELDS.items()}
@@ -127,8 +139,19 @@ def tiered_metrics(st, page_bytes: int) -> dict:
     out["trimma_promoted_bytes_total"] = g("promo_pages") * page_bytes
     out["trimma_demoted_bytes_total"] = g("demo_pages") * page_bytes
     # gauges: current residency / metadata footprint (Figure 9 analogue)
-    out["trimma_fast_resident_pages"] = jnp.sum(st.slot_owner != _INVALID)
-    out["trimma_metadata_pages"] = jnp.sum(st.leaf_cnt > 0)
+    resident = jnp.sum(st.slot_owner != _INVALID)
+    allocated = jnp.sum(st.leaf_cnt > 0)
+    out["trimma_fast_resident_pages"] = resident
+    out["trimma_metadata_pages"] = allocated
+    if n_logical is not None and fast_slots is not None:
+        copies = st.slot_owner.size // fast_slots    # 1, or L stacked
+        out["trimma_identity_entry_ratio"] = \
+            1.0 - resident.astype(jnp.float32) / (n_logical * copies)
+    if leaf_entries is not None:
+        leaves = st.leaf_cnt.size  # n_leaf, or L * n_leaf stacked
+        out["trimma_irt_leaf_occupancy"] = \
+            allocated.astype(jnp.float32) / leaves
+        out["trimma_metadata_bytes"] = allocated * leaf_entries * 4
     return out
 
 
@@ -146,11 +169,14 @@ def tap_stash(st) -> dict:
     return {f: getattr(st, f) for f in TAP_FIELDS}
 
 
-def stashed_metrics(stash: dict, page_bytes: int) -> dict:
+def stashed_metrics(stash: dict, page_bytes: int, **geometry) -> dict:
     """``tiered_metrics`` over a ``tap_stash`` dict.  The dict is a plain
     pytree, so this wrapper is what jit/vmap see: vmapping it over a
-    stacked batch of stashes yields every sample's metrics in one call."""
-    return tiered_metrics(types.SimpleNamespace(**stash), page_bytes)
+    stacked batch of stashes yields every sample's metrics in one call.
+    ``geometry`` forwards the optional ``n_logical``/``fast_slots``/
+    ``leaf_entries`` kwargs (the saved-metadata gauges)."""
+    return tiered_metrics(types.SimpleNamespace(**stash), page_bytes,
+                          **geometry)
 
 
 def legacy_counters(metrics: dict) -> dict:

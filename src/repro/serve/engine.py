@@ -49,8 +49,10 @@ from repro.configs.base import ArchConfig
 from repro.models import decode_step, forward
 from repro.models.kv_backend import TieredBackend, make_backend
 from repro.obs import NULL_TRACER, MetricsHub, ObsConfig, StepTracer
+from repro.obs import flight as obs_flight
 from repro.obs import metrics as obs_metrics
 from repro.obs.registry import MetricSpec, register
+from repro.obs.slo import SLOMonitor
 from repro.obs.trace import profiler_trace
 from repro.serve.decode import make_tiered_decode_step
 
@@ -153,6 +155,16 @@ class EngineConfig:
     # periodic MetricsHub samples and, when paths are set, the Prometheus
     # exposition / JSONL series / Perfetto trace written at drain
     obs: ObsConfig | None = None
+    # page-lifecycle flight recorder (obs/flight, DESIGN.md §12): a
+    # FlightConfig turns on the in-graph event ring (tiered backend
+    # only).  Independent of ``obs`` — the ring threads beside the
+    # donated decode state, so recorder-on keeps donation (and logits)
+    # untouched; when a hub exists too, the drained analytics export as
+    # trimma_flight_* metrics
+    flight: obs_flight.FlightConfig | None = None
+    # per-tenant SLO targets (obs/slo): SLOConfig tuple; the engine
+    # books every finished request and exports engine_slo_* burn rates
+    slos: tuple = ()
 
 
 class TieredServer:
@@ -196,9 +208,12 @@ class TieredServer:
 
     @property
     def metrics(self) -> dict:
-        """Canonical telemetry view of the store (obs tap, DESIGN.md §10)."""
+        """Canonical telemetry view of the store (obs tap, DESIGN.md §10).
+        Counters stay exact ints; the derived ratio gauges (identity
+        entry ratio, leaf occupancy) keep their fractional value."""
+        from repro.models.kv_backend import _host_num
         from repro.serve import tiered as srv
-        return {k: int(v)
+        return {k: _host_num(v)
                 for k, v in srv.metrics(self.cfg, self.state).items()}
 
     @property
@@ -304,12 +319,15 @@ class Engine:
         self.tracer = StepTracer() \
             if ec.obs is not None and ec.obs.trace_path else NULL_TRACER
         if self._tiered and ec.obs is not None:
+            from repro.core.remap.irt import E
             from repro.serve import tiered as srv
             tcfg = self.backend.tcfg
             self._tap = jax.jit(lambda c: srv.metrics(tcfg, c))
             self._batch_tap = jax.jit(lambda taps: jax.vmap(
                 lambda s: obs_metrics.stashed_metrics(
-                    s, page_bytes=tcfg.page_bytes))(
+                    s, page_bytes=tcfg.page_bytes,
+                    n_logical=tcfg.n_logical, fast_slots=tcfg.fast_slots,
+                    leaf_entries=E))(
                 jax.tree.map(lambda *xs: jnp.stack(xs), *taps)))
         self._pending_obs: list[dict] = []
         self._tokens_out = 0           # tokens harvested (engine_tokens_total)
@@ -317,6 +335,36 @@ class Engine:
         # benchmarks/run.py's obs section uses it to assert metrics-on
         # decode stays bit-identical to metrics-off
         self.logits_log: list | None = None
+        # flight recorder (obs/flight, DESIGN.md §12): the event ring is
+        # its own pytree threaded through jitted record+mutate fns — the
+        # donated decode step never sees it, so recorder-on changes no
+        # jit key and no logits.  Tenant stamps come from a host-side
+        # lane -> tenant-index mirror refreshed each loop iteration
+        self._fl_cfg = ec.flight \
+            if (ec.flight is not None and self._tiered) else None
+        self._fl = None
+        self._flight_cache: dict | None = None
+        self._tenant_idx: dict[str, int] = {}
+        for t in ec.tenants:
+            self._tenant_idx.setdefault(getattr(t, "name", str(t)),
+                                        len(self._tenant_idx))
+        if self._fl_cfg is not None:
+            self._fl = obs_flight.init(self._fl_cfg.capacity)
+            self._lane_tenant_np = np.zeros((ec.batch,), np.int32)
+            self._rec_apply_fn = jax.jit(self._make_rec_apply())
+            self._rec_release_fn = jax.jit(self._make_rec_release())
+        # per-tenant SLO burn-rate monitor (obs/slo)
+        self.slo = SLOMonitor(ec.slos) if ec.slos else None
+        # live endpoints (obs/http): needs the hub for /metrics
+        self.obs_server = None
+        if self.hub is not None and ec.obs.http_port is not None:
+            from repro.obs.http import ObsServer
+            self.obs_server = ObsServer(
+                metrics_fn=self.hub.to_prometheus,
+                health_fn=lambda: {"steps": self.steps,
+                                   "tokens": self._tokens_out},
+                state_fn=self.debug_state,
+                host=ec.obs.http_host, port=ec.obs.http_port)
 
     # -- request intake / scheduling ------------------------------------
 
@@ -371,6 +419,105 @@ class Engine:
         bucket = 1 << (need - 1).bit_length()
         return None if bucket >= tcfg.max_pages_per_seq else bucket
 
+    # -- flight recorder (obs/flight, DESIGN.md §12) ----------------------
+
+    def _make_rec_apply(self):
+        """Build the fused apply+record maintenance fn: applies a plan
+        via the descriptor-returning stacked pass and appends one event
+        per ACTUAL move — demotes, FIFO-victim evicts, promotes, forced
+        metadata evicts, in that (deterministic) order.  Events stamp
+        the step the plan was MADE at, so the overlapped apply records
+        the same stream as the synchronous pass (the event-order parity
+        test pins it); ``score`` stamps the page's tracker hotness at
+        apply time (best-effort — overlap applies one step later, so it
+        may differ from the sync stamp by that step's touches)."""
+        backend = self.backend
+        mpp = backend.tcfg.max_pages_per_seq
+
+        def fn(state, plan, fl, step, lane_tenant):
+            touch0 = state.caches.touch[0]
+            state, ddesc, pdesc = backend.apply_maintain_desc(state, plan)
+
+            def rec(fl, kind, cause, pages, en):
+                lane = pages // mpp
+                return obs_flight.record(
+                    fl, kind, pages, en, step=step, lane=lane,
+                    tenant=lane_tenant[lane], cause=cause,
+                    score=touch0[pages])
+
+            fl = rec(fl, obs_flight.K_DEMOTE, obs_flight.C_PLAN_DEMOTE,
+                     ddesc["cb1_dst"], ddesc["cb1_en"])
+            fl = rec(fl, obs_flight.K_EVICT, obs_flight.C_VICTIM,
+                     pdesc["cb1_dst"], pdesc["cb1_en"])
+            fl = rec(fl, obs_flight.K_PROMOTE, obs_flight.C_PLAN_PROMOTE,
+                     pdesc["in_src"], pdesc["in_en"])
+            fl = rec(fl, obs_flight.K_EVICT, obs_flight.C_FORCED,
+                     pdesc["cb2_dst"], pdesc["cb2_en"])
+            return state, fl
+
+        return fn
+
+    def _make_rec_release(self):
+        """Build the fused record+release fn: one RELEASE event per
+        page the lane still holds under Trimma metadata (resident leaf
+        entries on layer 0 — metadata is layer-uniform), then the
+        batched release itself."""
+        backend = self.backend
+        tcfg = backend.tcfg
+        from repro.tiered.kvcache import INVALID
+        mpp = tcfg.max_pages_per_seq
+
+        def fn(state, lane, fl, step, tenant):
+            lt0 = state.caches.leaf_table[0]
+            ids = lane * mpp + jnp.arange(mpp, dtype=jnp.int32)
+            held = lt0[ids] != INVALID
+            fl = obs_flight.record(
+                fl, obs_flight.K_RELEASE, ids, held, step=step,
+                lane=lane, tenant=tenant, cause=obs_flight.C_RECYCLE,
+                score=state.caches.touch[0][ids])
+            return backend.release(state, lane), fl
+
+        return fn
+
+    def _refresh_lane_tenants(self, lanes) -> None:
+        """Update the host-side lane -> tenant-index mirror from the live
+        lane assignments.  A freed lane keeps its LAST tenant — exactly
+        what the release event (recorded after the request finished)
+        must stamp."""
+        if self._fl is None:
+            return
+        for i, r in enumerate(lanes):
+            if r is not None:
+                idx = self._tenant_idx.setdefault(
+                    r.tenant_id, len(self._tenant_idx))
+                self._lane_tenant_np[i] = idx
+
+    def _lane_tenant(self):
+        return jnp.asarray(self._lane_tenant_np)
+
+    @property
+    def _tenant_names(self) -> list[str]:
+        return [t for t, _ in sorted(self._tenant_idx.items(),
+                                     key=lambda kv: kv[1])]
+
+    def flight_stats(self) -> dict | None:
+        """Drain the flight ring and derive the analytics (residency /
+        reuse-distance histograms, ping-pong churn, per-tenant counts —
+        ``obs.flight.analyze``).  None when the recorder is off; cached
+        until the ring next mutates."""
+        if self._fl is None:
+            return None
+        head = int(np.asarray(self._fl["head"]))
+        cached = self._flight_cache
+        if cached is not None and cached[0] == head:
+            return cached[1]
+        stats = obs_flight.analyze(
+            obs_flight.drain(self._fl),
+            pingpong_steps=self._fl_cfg.pingpong_steps,
+            tenant_names=self._tenant_names or ["default"])
+        self._flight_cache = (head, stats)
+        return stats
+
     def _flush_maintain(self, state, *, overlapped: bool = False):
         """Apply a deferred maintenance plan, if one is pending.  The
         double-buffered pass plans at the hook and applies here — at the
@@ -381,8 +528,14 @@ class Engine:
         every counter — is identical to the synchronous pass."""
         if self._pending_plan is None:
             return state
+        plan, plan_step = self._pending_plan
         with self.tracer.span("maintain_apply", step=self.steps):
-            state = self._apply_fn(state, self._pending_plan)
+            if self._fl is not None:
+                state, self._fl = self._rec_apply_fn(
+                    state, plan, self._fl, jnp.int32(plan_step),
+                    self._lane_tenant())
+            else:
+                state = self._apply_fn(state, plan)
         self._pending_plan = None
         if overlapped:
             self.maintain_overlaps += 1
@@ -401,7 +554,15 @@ class Engine:
         if self._tiered:
             state = self._flush_maintain(state)
             with self.tracer.span("release", lane=lane):
-                state = self._release(state, jnp.int32(lane))
+                if self._fl is not None:
+                    self._refresh_lane_tenants(
+                        getattr(self, "_lanes_ref", ()))
+                    state, self._fl = self._rec_release_fn(
+                        state, jnp.int32(lane), self._fl,
+                        jnp.int32(self.steps),
+                        jnp.int32(int(self._lane_tenant_np[lane])))
+                else:
+                    state = self._release(state, jnp.int32(lane))
             self.releases += 1
         return state
 
@@ -465,14 +626,48 @@ class Engine:
 
     def admit_fast(self, state, lane: int, length: int, n_pages: int):
         """Direct-to-fast admission: promote the first ``n_pages`` prompt
-        pages of ``lane`` into every layer's fast pool (tiered only)."""
+        pages of ``lane`` into every layer's fast pool (tiered only).
+        With the flight recorder on, each actual install (and any
+        eviction the admission forced) records an event from the install
+        descriptors."""
         if n_pages not in self._admit_fns:
-            self._admit_fns[n_pages] = jax.jit(
-                lambda s, ln, le: self.backend.admit_prefix(s, ln, le,
-                                                            n_pages))
+            if self._fl is None:
+                self._admit_fns[n_pages] = jax.jit(
+                    lambda s, ln, le: self.backend.admit_prefix(
+                        s, ln, le, n_pages))
+            else:
+                backend = self.backend
+                mpp = backend.tcfg.max_pages_per_seq
+
+                def fn(s, ln, le, fl, step, lane_tenant, np_=n_pages):
+                    touch0 = s.caches.touch[0]
+                    s, pdesc = backend.admit_prefix_desc(s, ln, le, np_)
+
+                    def rec(fl, kind, cause, pages, en):
+                        lane = pages // mpp
+                        return obs_flight.record(
+                            fl, kind, pages, en, step=step,
+                            lane=lane, tenant=lane_tenant[lane],
+                            cause=cause, score=touch0[pages])
+
+                    fl = rec(fl, obs_flight.K_EVICT, obs_flight.C_VICTIM,
+                             pdesc["cb1_dst"], pdesc["cb1_en"])
+                    fl = rec(fl, obs_flight.K_INSTALL, obs_flight.C_ADMIT,
+                             pdesc["in_src"], pdesc["in_en"])
+                    fl = rec(fl, obs_flight.K_EVICT, obs_flight.C_FORCED,
+                             pdesc["cb2_dst"], pdesc["cb2_en"])
+                    return s, fl
+
+                self._admit_fns[n_pages] = jax.jit(fn)
         with self.tracer.span("admit_fast", lane=lane, pages=n_pages):
-            return self._admit_fns[n_pages](state, jnp.int32(lane),
-                                            jnp.int32(length))
+            if self._fl is None:
+                return self._admit_fns[n_pages](state, jnp.int32(lane),
+                                                jnp.int32(length))
+            self._refresh_lane_tenants(getattr(self, "_lanes_ref", ()))
+            state, self._fl = self._admit_fns[n_pages](
+                state, jnp.int32(lane), jnp.int32(length), self._fl,
+                jnp.int32(self.steps), self._lane_tenant())
+            return state
 
     def build_maintain_tenants(self, pols: tuple, quotas: tuple):
         """Compile the multi-tenant maintenance pass against a static
@@ -499,6 +694,10 @@ class Engine:
                 or int(pos) >= self.ec.max_len - 1:
             req.done = True
             req.done_at = now
+            if self.slo is not None:
+                self.slo.observe(req.tenant_id,
+                                 latency_ms=1e3 * req.latency,
+                                 ttft_ms=1e3 * req.ttft)
 
     # -- prefill ---------------------------------------------------------
 
@@ -549,6 +748,7 @@ class Engine:
         sched = self.scheduler
         obs, tracer = ec.obs, self.tracer
         lanes: list[Request | None] = [None] * ec.batch
+        self._lanes_ref = lanes    # live view for /debug/state + recorder
         state = self.backend.init_state(ec.batch, ec.max_len)
         tokens = jnp.zeros((ec.batch,), jnp.int32)
         finished: list[Request] = []
@@ -557,10 +757,15 @@ class Engine:
         self._pending_plan = None  # never carry a plan across runs
         tracer.clear()             # one saved trace == one run
         self._pending_obs = []
+        if self._fl_cfg is not None:   # fresh ring: one ring == one run
+            self._fl = obs_flight.init(self._fl_cfg.capacity)
+            self._flight_cache = None
+            self._lane_tenant_np[:] = 0
 
         with profiler_trace(obs.profiler_dir if obs else None):
             state, tokens = sched.refill(state, tokens, lanes, finished)
             while any(l is not None for l in lanes):
+                self._refresh_lane_tenants(lanes)
                 # a plan deferred at the last hook applies now, its
                 # dispatch overlapping this step's host-side work
                 state = self._flush_maintain(state, overlapped=True)
@@ -577,13 +782,32 @@ class Engine:
                         # The span keeps the canonical "maintain" name —
                         # the §10 trace contract — with the apply half
                         # showing up as "maintain_apply" under the next
-                        # decode step
+                        # decode step.  The plan carries its hook step so
+                        # the deferred apply's flight events stamp the
+                        # decision time (identical to the sync stream)
                         with tracer.span("maintain", step=self.steps,
                                          phase="plan"):
-                            self._pending_plan = self._plan_fn(state)
+                            self._pending_plan = (self._plan_fn(state),
+                                                  self.steps)
+                    elif self._fl is not None \
+                            and not hasattr(self, "_maintain_tenants"):
+                        # synchronous with the recorder on: the same
+                        # plan+apply pair (run_scheduler_stacked IS
+                        # apply(plan) — bit-identical), tee'd through the
+                        # descriptor recorder
+                        with tracer.span("maintain", step=self.steps):
+                            state, self._fl = self._rec_apply_fn(
+                                state, self._plan_fn(state), self._fl,
+                                jnp.int32(self.steps),
+                                self._lane_tenant())
+                        self._bw_log.append(
+                            (np.asarray(state.caches.promo_pages),
+                             np.asarray(state.caches.demo_pages)))
                     else:
                         # synchronous (multi-tenant maintenance always is:
-                        # the tenant map can go stale across a deferral)
+                        # the tenant map can go stale across a deferral;
+                        # its moves are not flight-recorded — the plan
+                        # has no single-descriptor pass)
                         with tracer.span("maintain", step=self.steps):
                             state = sched.maintain(state)
                         self._bw_log.append(
@@ -612,6 +836,10 @@ class Engine:
                         # latency is measured from its own enqueue time, not
                         # the batch wave's anchor
                         r.done_at = now
+                        if self.slo is not None:
+                            self.slo.observe(r.tenant_id,
+                                             latency_ms=1e3 * r.latency,
+                                             ttft_ms=1e3 * r.ttft)
                 if self.hub is not None \
                         and self.steps % obs.sample_every == 0:
                     self._sample(state, lanes, len(finished))
@@ -642,6 +870,21 @@ class Engine:
             releases=self.releases, overlaps=self.maintain_overlaps,
             tap=obs_metrics.tap_stash(state.caches)
             if self._tiered else None))
+        if self.obs_server is not None:
+            # live endpoints are up: publish the host-int books NOW so a
+            # mid-run /metrics scrape sees current values (record is an
+            # absolute overwrite — the drain replay lands on the same
+            # numbers, so nothing double counts).  The tiered tap series
+            # still waits for the batched drain
+            self.hub.record({
+                "engine_steps_total": self.steps,
+                "engine_tokens_total": self._tokens_out,
+                "engine_finished_requests_total": n_finished,
+                "engine_releases_total": self.releases,
+                "engine_maintain_overlap": self.maintain_overlaps})
+            self.hub.set("engine_queue_depth", len(self.queue))
+            self.hub.set("engine_active_lanes",
+                         sum(1 for l in lanes if l is not None))
 
     def _drain_samples(self) -> None:
         """Replay the stashed sample points into the hub, in order: one
@@ -651,6 +894,9 @@ class Engine:
         observed time)."""
         hub, pend = self.hub, self._pending_obs
         self._pending_obs = []
+        if pend:
+            # keep the newest point for post-run /debug/state scrapes
+            self._last_obs = pend[-1]
         series: dict = {}
         if pend and pend[0]["tap"] is not None:
             series = jax.device_get(
@@ -706,9 +952,56 @@ class Engine:
         if book is not None and hasattr(book, "metrics"):
             for name, value, labels in book.metrics():
                 hub.set(name, value, labels=labels)
+        if self.slo is not None:
+            self.slo.export(hub)
+        fs = self.flight_stats()
+        if fs is not None:
+            obs_flight.export(hub, fs)
         hub.finalize(step=self.steps)
         if self.ec.obs.trace_path and self.tracer is not NULL_TRACER:
             self.tracer.save(self.ec.obs.trace_path)
+
+    def debug_state(self) -> dict:
+        """Live JSON-able snapshot for ``/debug/state`` (obs/http): the
+        engine books, per-lane assignments, tenant quotas/fairness,
+        fast-pool occupancy (from the newest stashed sample — obs-on
+        disables donation, so stashed references stay readable), the
+        flight-recorder analytics and the SLO summary.  Called from the
+        HTTP thread: read-only, device_gets only immutable arrays."""
+        lanes = getattr(self, "_lanes_ref", None) or []
+        out: dict = {
+            "steps": self.steps,
+            "tokens_out": self._tokens_out,
+            "releases": self.releases,
+            "maintain_overlaps": self.maintain_overlaps,
+            "queue_depth": len(self.queue),
+            "lanes": [None if r is None else
+                      {"rid": r.rid, "tenant": r.tenant_id,
+                       "tokens": len(r.tokens), "max_new": r.max_new,
+                       "done": r.done}
+                      for r in lanes],
+        }
+        book = getattr(self.scheduler, "book", None)
+        if book is not None and hasattr(book, "fairness"):
+            out["tenants"] = book.fairness()
+        pend = self._pending_obs
+        last = pend[-1] if pend else getattr(self, "_last_obs", None)
+        if last is not None and last.get("tap") is not None:
+            tap = last["tap"]
+            out["fast_pool"] = {
+                "sampled_step": last["step"],
+                "resident_pages":
+                    int(np.asarray(tap["slot_owner"] != -1).sum()),
+                "slots": int(np.asarray(tap["slot_owner"]).size),
+                "metadata_pages":
+                    int(np.asarray(tap["leaf_cnt"] > 0).sum()),
+            }
+        fs = self.flight_stats()
+        if fs is not None:
+            out["flight"] = fs
+        if self.slo is not None:
+            out["slo"] = self.slo.summary()
+        return out
 
     @property
     def counters(self) -> dict:

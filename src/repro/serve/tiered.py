@@ -144,5 +144,10 @@ def metrics(cfg: tk.TieredConfig, st: tk.TieredState) -> dict:
     over the in-graph counters under their registered ``trimma_*`` names,
     bandwidth already scaled to bytes.  Works on a single store, a
     layer-stacked one (``models.kv_backend.TieredBackend``) or any vmapped
-    state — counters sum over every leading axis."""
-    return obs_metrics.tiered_metrics(st, page_bytes=cfg.page_bytes)
+    state — counters sum over every leading axis.  The config's geometry
+    additionally derives the saved-metadata gauges (identity-entry
+    ratio, iRT leaf occupancy, metadata bytes — DESIGN.md §12)."""
+    return obs_metrics.tiered_metrics(st, page_bytes=cfg.page_bytes,
+                                      n_logical=cfg.n_logical,
+                                      fast_slots=cfg.fast_slots,
+                                      leaf_entries=tk.E)

@@ -91,6 +91,15 @@ register(
     MetricSpec("trimma_metadata_pages", "gauge",
                "allocated iRT leaf blocks (saved-space metadata "
                "footprint, Figure 9 analogue)"),
+    MetricSpec("trimma_identity_entry_ratio", "gauge",
+               "fraction of logical pages holding NO remap entry "
+               "(identity-mapped — the saved-metadata story, live)"),
+    MetricSpec("trimma_irt_leaf_occupancy", "gauge",
+               "allocated iRT leaf blocks / provisioned leaf slots "
+               "(leaf-level table occupancy)"),
+    MetricSpec("trimma_metadata_bytes", "gauge",
+               "bytes of allocated iRT leaf metadata (E entries x 4 "
+               "bytes per allocated leaf)", unit="bytes"),
 )
 
 
@@ -1028,17 +1037,30 @@ def plan_maintenance(cfg: TieredConfig, sts: TieredState,
     return pol_sched.plan(pol, sc, resident, mm)
 
 
-def apply_maintenance_stacked(cfg: TieredConfig, sts: TieredState,
-                              p) -> TieredState:
-    """Apply a Plan to a stacked state: metadata once on layer 0 with
-    pool writes recorded as descriptors, copies replayed over the [L, ...]
-    stack, metadata broadcast back."""
+def apply_maintenance_stacked_desc(cfg: TieredConfig, sts: TieredState,
+                                   p):
+    """``apply_maintenance_stacked`` that also returns the move
+    descriptors ``(state, ddesc, pdesc)`` — the per-move copy records
+    (``_demote_one_desc`` / ``_migrate_one_desc``) the replay consumed.
+    The descriptors are the ground truth of what actually moved (a
+    planned promotion whose page was already resident records a
+    disabled move), so the flight recorder (obs/flight, DESIGN.md §12)
+    stamps its promote/demote/evict events from them."""
     L = sts.fast_k.shape[0]
     st0 = _layer0(sts)
     st0, ddesc, pdesc = _apply_plan(cfg, st0, p, _now(cfg, st0),
                                     apply_pools=False)
     pools = _replay_descs(cfg, _stacked_pools(sts), ddesc, pdesc)
-    return _restack(st0, pools, L)
+    return _restack(st0, pools, L), ddesc, pdesc
+
+
+def apply_maintenance_stacked(cfg: TieredConfig, sts: TieredState,
+                              p) -> TieredState:
+    """Apply a Plan to a stacked state: metadata once on layer 0 with
+    pool writes recorded as descriptors, copies replayed over the [L, ...]
+    stack, metadata broadcast back."""
+    sts, _, _ = apply_maintenance_stacked_desc(cfg, sts, p)
+    return sts
 
 
 def run_scheduler_stacked(cfg: TieredConfig, sts: TieredState,
@@ -1132,10 +1154,11 @@ def prefill_chunk_stacked(cfg: TieredConfig, sts: TieredState, seq, k, v,
         slow_v=sts.slow_v.at[:, slow_idx].set(paged(v), mode="drop"))
 
 
-def admit_pages_stacked(cfg: TieredConfig, sts: TieredState, seq, length,
-                        n_pages: int) -> TieredState:
-    """Stacked ``admit_pages``: the promotion scan runs once on layer-0
-    metadata, the install copies replay over the stack."""
+def admit_pages_stacked_desc(cfg: TieredConfig, sts: TieredState, seq,
+                             length, n_pages: int):
+    """``admit_pages_stacked`` that also returns the install descriptors
+    ``(state, pdesc)`` — the flight recorder stamps its install (and any
+    admission-triggered eviction) events from them."""
     L = sts.fast_k.shape[0]
     st0 = _layer0(sts)
     seq = jnp.asarray(seq, jnp.int32)
@@ -1152,4 +1175,12 @@ def admit_pages_stacked(cfg: TieredConfig, sts: TieredState, seq, length,
     st0 = _tr_replace(st0, pol_track.record(cfg.pol, _tr_view(cfg, st0), ids,
                                             now=_now(cfg, st0), enable=en))
     pools = _replay_descs(cfg, _stacked_pools(sts), None, pdesc)
-    return _restack(st0, pools, L)
+    return _restack(st0, pools, L), pdesc
+
+
+def admit_pages_stacked(cfg: TieredConfig, sts: TieredState, seq, length,
+                        n_pages: int) -> TieredState:
+    """Stacked ``admit_pages``: the promotion scan runs once on layer-0
+    metadata, the install copies replay over the stack."""
+    sts, _ = admit_pages_stacked_desc(cfg, sts, seq, length, n_pages)
+    return sts

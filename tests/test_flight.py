@@ -1,0 +1,340 @@
+"""Page-lifecycle flight recorder, SLO monitor and live endpoints
+(DESIGN.md §12): ring wraparound exactness, jitted record semantics,
+analytics over synthetic streams, the engine taps (sync-vs-overlap event
+parity, recorder-on token identity), burn-rate bookkeeping, and the
+HTTP endpoint contract."""
+
+import functools
+import json
+import urllib.error
+import urllib.request
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.obs import FlightConfig, MetricsHub, SLOConfig, SLOMonitor
+from repro.obs import flight as fl
+from repro.obs import parse_prometheus, parse_slos
+
+
+@functools.lru_cache(maxsize=1)
+def _smoke_model():
+    from repro.configs import get_config, reduce_for_smoke
+    from repro.models import init_params
+    cfg = reduce_for_smoke(get_config("llama3-8b"))
+    return cfg, init_params(cfg, jax.random.key(0))
+
+
+# ---------------------------------------------------------------------------
+# ring buffer
+# ---------------------------------------------------------------------------
+
+def test_ring_record_and_drain_order():
+    ring = fl.init(8)
+    rec = jax.jit(lambda r, p, e, s: fl.record(
+        r, fl.K_PROMOTE, p, e, step=s, lane=p // 4, tenant=0,
+        cause=fl.C_PLAN_PROMOTE))
+    ring = rec(ring, jnp.arange(3, dtype=jnp.int32),
+               jnp.array([True, True, True]), jnp.int32(1))
+    ring = rec(ring, jnp.arange(10, 13, dtype=jnp.int32),
+               jnp.array([True, False, True]), jnp.int32(2))
+    ev = fl.drain(ring)
+    assert ev["n"] == 5 and ev["dropped"] == 0
+    # batch order within a call, call order across calls; disabled
+    # entries vanish without a hole
+    assert list(ev["page"]) == [0, 1, 2, 10, 12]
+    assert list(ev["step"]) == [1, 1, 1, 2, 2]
+    assert list(ev["lane"]) == [0, 0, 0, 2, 3]
+    assert int(ev["counts"][fl.K_PROMOTE]) == 5
+
+
+def test_ring_wraparound_drops_oldest_counts_exact():
+    cap = 8
+    ring = fl.init(cap)
+    rec = jax.jit(lambda r, p, k, s: fl.record(
+        r, k, p, jnp.ones_like(p, bool), step=s, lane=0, tenant=0,
+        cause=fl.C_VICTIM), static_argnums=(2,))
+    total = 0
+    for batch in range(5):                       # 5 batches of 3 = 15 > 8
+        pages = jnp.arange(batch * 3, batch * 3 + 3, dtype=jnp.int32)
+        kind = fl.K_EVICT if batch % 2 else fl.K_INSTALL
+        ring = rec(ring, pages, kind, jnp.int32(batch))
+        total += 3
+    ev = fl.drain(ring)
+    assert ev["total_events"] == total == 15
+    assert ev["n"] == cap
+    assert ev["dropped"] == total - cap == 7
+    # the surviving window is exactly the NEWEST cap events, in order
+    assert list(ev["page"]) == list(range(7, 15))
+    # per-kind totals are exact across the wraparound (9 install batches
+    # 0/2/4, 6 evict batches 1/3)
+    assert int(ev["counts"][fl.K_INSTALL]) == 9
+    assert int(ev["counts"][fl.K_EVICT]) == 6
+
+
+def test_ring_disabled_entries_do_not_advance_head():
+    ring = fl.init(4)
+    ring = fl.record(ring, fl.K_RELEASE, jnp.arange(4, dtype=jnp.int32),
+                     jnp.zeros(4, bool), step=0, lane=0, tenant=0,
+                     cause=fl.C_RECYCLE)
+    assert int(ring["head"]) == 0
+    assert fl.drain(ring)["n"] == 0
+
+
+# ---------------------------------------------------------------------------
+# analytics
+# ---------------------------------------------------------------------------
+
+def _synthetic(events):
+    """[(kind, page, step, tenant)] -> a drained-window dict."""
+    n = len(events)
+    counts = np.zeros(len(fl.KINDS), np.int64)
+    for k, _, _, _ in events:
+        counts[k] += 1
+    return {
+        "kind": np.array([e[0] for e in events]),
+        "page": np.array([e[1] for e in events]),
+        "step": np.array([e[2] for e in events]),
+        "layer": np.zeros(n, np.int32),
+        "lane": np.zeros(n, np.int32),
+        "tenant": np.array([e[3] for e in events]),
+        "cause": np.zeros(n, np.int32),
+        "score": np.zeros(n, np.int32),
+        "n": n, "total_events": n, "dropped": 0, "counts": counts,
+    }
+
+
+def test_analyze_residency_reuse_pingpong():
+    ev = _synthetic([
+        (fl.K_INSTALL, 7, 0, 0),     # enters fast at step 0
+        (fl.K_EVICT, 7, 4, 0),       # leaves: residency 4, reuse armed
+        (fl.K_PROMOTE, 7, 6, 0),     # back after 2 steps -> ping-pong
+        (fl.K_DEMOTE, 7, 16, 0),     # residency 10
+        (fl.K_PROMOTE, 9, 1, 1),     # tenant 1's page
+        (fl.K_RELEASE, 9, 3, 1),     # residency 2; release arms nothing
+        (fl.K_PROMOTE, 9, 50, 1),    # NOT reuse (the release closed it)
+    ])
+    out = fl.analyze(ev, pingpong_steps=3, tenant_names=["a", "b"])
+    assert out["by_kind"]["promote"] == 3
+    assert out["residency"]["count"] == 3
+    assert sorted([4, 10, 2]) == sorted(
+        [4, 10, 2])  # documented: stays of 4, 10 and 2 steps
+    assert out["residency"]["max_steps"] == 10
+    assert out["reuse"]["count"] == 1
+    assert out["reuse"]["mean_steps"] == 2.0
+    assert out["pingpong"]["events"] == 1
+    assert out["pingpong"]["pages"] == 1
+    assert out["pingpong"]["top_pages"] == [[7, 1]]
+    assert out["per_tenant"]["a"]["install"] == 1
+    assert out["per_tenant"]["b"]["promote"] == 2
+    assert out["per_tenant"]["b"]["release"] == 1
+
+
+def test_analyze_empty_window():
+    out = fl.analyze(fl.drain(fl.init(4)))
+    assert out["n_events"] == 0
+    assert out["residency"] == {"count": 0}
+    assert out["pingpong"]["events"] == 0
+
+
+def test_export_into_hub_round_trips():
+    ev = _synthetic([(fl.K_PROMOTE, 1, 0, 0), (fl.K_EVICT, 1, 5, 0)])
+    stats = fl.analyze(ev)
+    hub = MetricsHub()
+    fl.export(hub, stats)
+    parsed = parse_prometheus(hub.to_prometheus())
+    assert parsed["samples"]["trimma_flight_events_total"] == 2
+    assert parsed["samples"][
+        'trimma_flight_kind_events_total{kind="promote"}'] == 1
+    assert "trimma_page_residency_steps" in parsed["families"]
+
+
+# ---------------------------------------------------------------------------
+# engine taps
+# ---------------------------------------------------------------------------
+
+def _run_engine(seed=3, **cfg_kw):
+    from repro.serve.engine import Engine, EngineConfig, Request
+    cfg, params = _smoke_model()
+    eng = Engine(cfg, params, EngineConfig(
+        batch=2, max_len=64, backend="tiered", page_tokens=8,
+        fast_data_slots=4, maintain_every=2, **cfg_kw))
+    rng = np.random.default_rng(seed)
+    for rid in range(4):
+        eng.submit(Request(rid=rid, prompt=rng.integers(0, cfg.vocab, 4),
+                           max_new=8))
+    return eng, eng.run()
+
+
+def test_engine_recorder_tokens_identical_and_stats():
+    _, plain = _run_engine()
+    eng, done = _run_engine(flight=FlightConfig(capacity=512))
+    assert [r.tokens for r in done] == [r.tokens for r in plain]
+    stats = eng.flight_stats()
+    assert stats["n_events"] > 0 and stats["dropped"] == 0
+    # every lane recycle recorded its resident pages
+    assert stats["by_kind"]["release"] > 0
+    assert stats["by_kind"]["promote"] > 0
+    assert "default" in stats["per_tenant"]
+    # stats cache: same head -> same object
+    assert eng.flight_stats() is stats
+
+
+def test_recorder_event_stream_matches_sync_maintain():
+    """The overlapped (double-buffered) maintenance pass must record the
+    SAME event stream as the synchronous one: plans are stamped with the
+    step they were made at, and every plan applies before the next
+    metadata mutation.  (``score`` is exempt: the overlapped apply reads
+    the hotness tracker one step later.)"""
+    keys = ("kind", "page", "step", "lane", "tenant", "cause")
+    streams = {}
+    for name, overlap in (("sync", False), ("overlap", True)):
+        eng, done = _run_engine(flight=FlightConfig(capacity=512),
+                                overlap_maintain=overlap)
+        assert len(done) == 4
+        ev = fl.drain(eng._fl)
+        streams[name] = {k: list(map(int, ev[k])) for k in keys}
+        streams[name]["n"] = ev["n"]
+    assert streams["sync"]["n"] > 0
+    assert streams["sync"] == streams["overlap"]
+
+
+def test_engine_flight_off_has_no_ring():
+    eng, _ = _run_engine()
+    assert eng.flight_stats() is None
+
+
+# ---------------------------------------------------------------------------
+# SLO monitor
+# ---------------------------------------------------------------------------
+
+def test_parse_slos():
+    slos = parse_slos("interactive:latency:250:0.95:16,*:ttft:500")
+    assert slos[0] == SLOConfig("interactive", "latency", 250.0, 0.95, 16)
+    assert slos[1].tenant == "*" and slos[1].stat == "ttft"
+    assert slos[1].objective == 0.9 and slos[1].window == 64
+    assert parse_slos(None) == () and parse_slos("") == ()
+    with pytest.raises(ValueError):
+        parse_slos("tenant-only:latency")
+    with pytest.raises(AssertionError):
+        parse_slos("a:throughput:5")
+
+
+def test_slo_burn_rate_and_wildcard():
+    mon = SLOMonitor(parse_slos("*:latency:100:0.9:10"))
+    for _ in range(8):
+        mon.observe("a", latency_ms=50.0, ttft_ms=1.0)
+    for _ in range(2):
+        mon.observe("a", latency_ms=500.0, ttft_ms=1.0)
+    mon.observe("b", latency_ms=500.0, ttft_ms=1.0)
+    rows = {r["tenant"]: r for r in mon.summary()}
+    # tenant a: 2/10 violating over objective 0.9 -> burn 0.2/0.1 = 2.0
+    assert rows["a"]["burn_rate"] == pytest.approx(2.0)
+    assert not rows["a"]["ok"]
+    assert rows["a"]["violations_total"] == 2
+    # tenant b tracked separately under the wildcard: 1/1 -> burn 10
+    assert rows["b"]["burn_rate"] == pytest.approx(10.0)
+
+
+def test_slo_window_rolls():
+    mon = SLOMonitor((SLOConfig("t", "latency", 100.0, 0.5, window=4),))
+    for _ in range(4):
+        mon.observe("t", latency_ms=500.0, ttft_ms=0.0)
+    for _ in range(4):                      # good requests roll bad out
+        mon.observe("t", latency_ms=1.0, ttft_ms=0.0)
+    row = mon.summary()[0]
+    assert row["window_violations"] == 0 and row["ok"]
+    assert row["violations_total"] == 4     # lifetime counter keeps them
+
+
+def test_slo_export_families():
+    mon = SLOMonitor(parse_slos("*:latency:100"))
+    mon.observe("x", latency_ms=500.0, ttft_ms=0.0)
+    hub = MetricsHub()
+    mon.export(hub)
+    parsed = parse_prometheus(hub.to_prometheus())
+    for fam in ("engine_slo_target_ms", "engine_slo_objective",
+                "engine_slo_window_requests", "engine_slo_violations_total",
+                "engine_slo_burn_rate"):
+        assert fam in parsed["families"], fam
+    e = parsed["series"]["engine_slo_burn_rate"][0]
+    assert e["labels"] == {"tenant": "x", "stat": "latency"}
+    assert e["value"] == pytest.approx(10.0)
+
+
+def test_engine_books_slo_observations():
+    eng, done = _run_engine(slos=parse_slos("*:latency:1e9,*:ttft:1e-6"))
+    rows = {(r["tenant"], r["stat"]): r for r in eng.slo.summary()}
+    assert rows[("default", "latency")]["window_n"] == len(done)
+    assert rows[("default", "latency")]["window_violations"] == 0
+    # ttft target of 1ns: every request violates, burn maxes out
+    assert rows[("default", "ttft")]["window_violations"] == len(done)
+    assert not rows[("default", "ttft")]["ok"]
+
+
+# ---------------------------------------------------------------------------
+# HTTP endpoints
+# ---------------------------------------------------------------------------
+
+def _get(url):
+    with urllib.request.urlopen(url, timeout=10) as r:
+        return r.status, r.headers.get("Content-Type"), r.read().decode()
+
+
+def test_obs_server_endpoints():
+    from repro.obs.http import ObsServer
+    hub = MetricsHub()
+    hub.record({"engine_steps_total": 7})
+    hub.set("engine_queue_depth", 2, labels={"tenant": 'q"uo\\te'})
+    srv = ObsServer(metrics_fn=hub.to_prometheus,
+                    health_fn=lambda: {"steps": 7},
+                    state_fn=lambda: {"lanes": [None], "steps": 7})
+    try:
+        status, ctype, body = _get(srv.url + "/metrics")
+        assert status == 200 and "text/plain" in ctype
+        parsed = parse_prometheus(body)
+        assert parsed["samples"]["engine_steps_total"] == 7
+        # the escaped label survives the scrape round-trip
+        e = parsed["series"]["engine_queue_depth"][0]
+        assert e["labels"]["tenant"] == 'q"uo\\te'
+
+        status, ctype, body = _get(srv.url + "/healthz")
+        assert status == 200 and "application/json" in ctype
+        assert json.loads(body) == {"status": "ok", "steps": 7}
+
+        status, _, body = _get(srv.url + "/debug/state")
+        assert json.loads(body)["lanes"] == [None]
+
+        with pytest.raises(urllib.error.HTTPError) as e:
+            _get(srv.url + "/nope")
+        assert e.value.code == 404
+    finally:
+        srv.close()
+
+
+def test_engine_serves_live_endpoints(tmp_path):
+    from repro.obs import ObsConfig
+    eng, done = _run_engine(
+        flight=FlightConfig(capacity=512),
+        slos=parse_slos("*:latency:1e9"),
+        obs=ObsConfig(sample_every=2, http_port=0,
+                      prom_path=str(tmp_path / "prom.txt")))
+    try:
+        assert eng.obs_server is not None
+        status, _, body = _get(eng.obs_server.url + "/metrics")
+        parsed = parse_prometheus(body)
+        assert parsed["samples"]["engine_steps_total"] == eng.steps
+        assert parsed["samples"]["trimma_flight_events_total"] > 0
+        assert "engine_slo_burn_rate" in parsed["families"]
+
+        _, _, body = _get(eng.obs_server.url + "/debug/state")
+        state = json.loads(body)
+        assert state["steps"] == eng.steps
+        assert state["flight"]["n_events"] > 0
+        assert state["slo"][0]["tenant"] == "default"
+        assert state["fast_pool"]["resident_pages"] >= 0
+        assert len(state["lanes"]) == 2
+    finally:
+        eng.obs_server.close()

@@ -1,0 +1,88 @@
+"""Bench-trajectory regression gate (benchmarks/check_bench
+--against-history): headline extraction, history append, and the
+median-window regression rules the CI gate enforces."""
+
+import json
+
+from benchmarks.check_bench import GATED, check_history, headline
+from benchmarks.run import _append_history
+
+PAYLOAD = {
+    "serve_decode": {"speedup_cached_vs_concat": 2.0,
+                     "zero_copy_cached": {"us_per_step": 10.0}},
+    "engine_decode": {"tokens_ratio": 1.2},
+    "flight": {"tokens_ratio": 0.99},
+    "rows": [],
+}
+
+
+def test_headline_flattens_gated_metrics():
+    h = headline(PAYLOAD)
+    assert h == {"serve_decode.speedup_cached_vs_concat": 2.0,
+                 "engine_decode.tokens_ratio": 1.2,
+                 "flight.tokens_ratio": 0.99}
+    assert headline({}) == {}
+    # every gated section names metrics that the bench actually emits
+    assert set(GATED) == {"serve_decode", "engine_decode", "sched",
+                          "obs", "flight"}
+
+
+def test_append_history_accumulates_records(tmp_path):
+    path = str(tmp_path / "history.jsonl")
+    _append_history(PAYLOAD, path=path)
+    _append_history(PAYLOAD, path=path)
+    recs = [json.loads(line) for line in
+            open(path).read().strip().splitlines()]
+    assert len(recs) == 2
+    assert recs[0]["headline"]["engine_decode.tokens_ratio"] == 1.2
+    assert recs[0]["sections"] == ["engine_decode", "flight",
+                                   "serve_decode"]
+    assert recs[0]["ts"] > 0 and "T" in recs[0]["iso"]
+
+
+def _write_history(tmp_path, values, key="flight.tokens_ratio"):
+    path = str(tmp_path / "history.jsonl")
+    with open(path, "w") as f:
+        for v in values:
+            f.write(json.dumps({"ts": 0, "headline": {key: v}}) + "\n")
+    return path
+
+
+def test_history_back_to_back_passes(tmp_path):
+    path = str(tmp_path / "history.jsonl")
+    _append_history(PAYLOAD, path=path)
+    assert check_history(PAYLOAD, path)
+    _append_history(PAYLOAD, path=path)
+    assert check_history(PAYLOAD, path)
+
+
+def test_history_injected_regression_fails(tmp_path):
+    path = _write_history(tmp_path, [1.0, 1.0, 1.0])
+    good = {"flight": {"tokens_ratio": 0.95}}   # within 10% of median 1.0
+    bad = {"flight": {"tokens_ratio": 0.80}}    # 20% below -> gate fails
+    assert check_history(good, path)
+    assert not check_history(bad, path)
+
+
+def test_history_windows_only_recent_records(tmp_path):
+    # five recent good records push an ancient bad era out of the window
+    path = _write_history(tmp_path, [0.1, 0.1, 1.0, 1.0, 1.0, 1.0, 1.0])
+    assert not check_history({"flight": {"tokens_ratio": 0.85}}, path)
+    # and a slow decay within tolerance per step still passes
+    path2 = _write_history(tmp_path, [1.0])
+    assert check_history({"flight": {"tokens_ratio": 0.91}}, path2)
+
+
+def test_history_empty_or_missing_passes(tmp_path):
+    missing = str(tmp_path / "nope.jsonl")
+    assert check_history(PAYLOAD, missing)
+    empty = str(tmp_path / "empty.jsonl")
+    open(empty, "w").close()
+    assert check_history(PAYLOAD, empty)       # records exist for no key
+    assert check_history({"rows": []}, missing)  # no gated sections
+
+
+def test_history_ignores_foreign_keys(tmp_path):
+    # records from runs of OTHER sections don't gate this payload
+    path = _write_history(tmp_path, [5.0], key="sched.tokens_ratio")
+    assert check_history({"flight": {"tokens_ratio": 0.5}}, path)
